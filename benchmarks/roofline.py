@@ -1,0 +1,99 @@
+"""Roofline report generator: reads dryrun_results.json and emits the
+per-(arch × shape × mesh) three-term table for EXPERIMENTS.md §Roofline.
+
+    PYTHONPATH=src python -m benchmarks.roofline dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def fmt_time(t: float) -> str:
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.1f}ms"
+    return f"{t*1e6:.0f}us"
+
+
+def _recompute(r: Dict) -> Dict:
+    """Recompute roofline terms live from the analytical model (keeps the
+    report in sync with costmodel.py without re-lowering)."""
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.models.costmodel import BYTES, count_params, roofline_terms
+    cfg = get_config(r["arch"])
+    shape = SHAPES[r["shape"]]
+    mode = "train" if shape.kind == "train" else "serve"
+    if "weight_gather" in r:
+        wg = r["weight_gather"]
+    else:
+        # mirror sharding.param_pspecs' serve auto-decision
+        total, _ = count_params(cfg)
+        per_shard = total * BYTES[cfg.dtype] / r["mesh"].get("model", 1)
+        wg = mode == "serve" and per_shard > 10e9
+    return roofline_terms(cfg, shape, r["mesh"], mode, weight_gather=wg,
+                          verify_block=r.get("verify_block", 1),
+                          capacity_factor=r.get("capacity_factor"),
+                          remat=r.get("remat_override"),
+                          grad_compress=r.get("grad_compress", False))
+
+
+def rows(results: List[Dict], mesh_filter=None) -> List[str]:
+    out = []
+    for r in results:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | SKIP | "
+                       f"{r['reason'][:60]} | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | ERROR | "
+                       f"{r.get('error','')[:60]} | | | | |")
+            continue
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        if mesh_filter and mesh != mesh_filter:
+            continue
+        rf = r["roofline"] = _recompute(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {rf['dominant']} | "
+            f"{fmt_time(rf['t_compute'])} | {fmt_time(rf['t_memory'])} | "
+            f"{fmt_time(rf['t_collective'])} | {rf['useful_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.2f} |")
+    return out
+
+
+HEADER = ("| arch | shape | mesh | bottleneck | t_compute | t_memory | "
+          "t_collective | useful FLOP ratio | roofline fraction |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    print(HEADER)
+    seen = set()
+    for r in results:
+        key = (r["arch"], r["shape"], json.dumps(r.get("mesh", {}), sort_keys=True))
+        if key in seen:
+            continue
+        seen.add(key)
+    for line in rows(results):
+        print(line)
+    ok = [r for r in results if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["t_collective"]
+                   / max(max(r["roofline"]["t_compute"],
+                             r["roofline"]["t_memory"],
+                             r["roofline"]["t_collective"]), 1e-30))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+              f"x {worst['mesh']} ({worst['roofline']['roofline_fraction']:.3f})")
+        print(f"most collective-bound: {coll['arch']} x {coll['shape']} "
+              f"x {coll['mesh']}")
+
+
+if __name__ == "__main__":
+    main()

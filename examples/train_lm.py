@@ -1,0 +1,59 @@
+"""Train a small MoE LM for a few hundred steps with the full substrate:
+synthetic data pipeline, AdamW + cosine schedule, per-layer remat, async
+checkpointing, and a mid-run simulated failure + restart (the fault-
+tolerance path).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--big]
+
+``--big`` uses a ~100M-param config (slow on CPU: ~seconds/step).
+"""
+import argparse
+import tempfile
+import time
+
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.launch.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params instead of the tiny default")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step to demo restart")
+    args = ap.parse_args()
+
+    if args.big:   # ~100M: 8L x 512d x 8 experts(256 ffn) top-2
+        cfg = get_config("mixtral-8x7b").reduced(
+            num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+            head_dim=64, moe_d_ff=1024, d_ff=1024, vocab_size=32000,
+            num_experts=8, num_experts_per_tok=2, sliding_window=None)
+        shape = ShapeConfig("ex", 256, 8, "train")
+    else:
+        cfg = get_config("mixtral-8x7b").reduced(sliding_window=None)
+        shape = ShapeConfig("ex", 64, 8, "train")
+    from repro.models.costmodel import count_params
+    total, active = count_params(cfg)
+    print(f"model: {total/1e6:.1f}M params ({active/1e6:.1f}M active/token)")
+
+    run = RunConfig(microbatch=2, learning_rate=1e-3, warmup_steps=20,
+                    total_steps=args.steps)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr = Trainer(cfg, shape, run, ckpt_dir=ckpt_dir)
+        t0 = time.time()
+        fail_at = args.fail_at if args.fail_at else args.steps // 2
+        try:
+            tr.train(args.steps, ckpt_every=25, fail_at=fail_at, log_every=20)
+        except RuntimeError as e:
+            print(f"!! {e} — restarting from checkpoint "
+                  f"step {tr.ckpt.latest_step()}")
+            tr2 = Trainer(cfg, shape, run, ckpt_dir=ckpt_dir)
+            _, losses = tr2.train(args.steps, ckpt_every=25, log_every=20)
+            print(f"recovered; final loss {losses[-1]:.4f} "
+                  f"({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""deepseek-v2-lite-16b — MoE with MLA (kv_lora=512), 64 routed top-6 + 2 shared.
+[arXiv:2405.04434; hf]
+
+Assignment note: the pool entry says "MoE 64e top-6 ... 2 shared+160 routed";
+real DeepSeek-V2-Lite has 64 routed experts (160 belongs to full V2).  We
+follow the `64e top-6` spec — see DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,           # MLA: heads share the compressed latent cache
+    head_dim=128,              # nope head dim
+    d_ff=10944,                # dense FFN of the leading layer
+    vocab_size=102400,
+    ffn_activation="swiglu",
+    num_experts=64,
+    num_experts_per_tok=6,
+    num_shared_experts=2,
+    moe_d_ff=1408,
+    first_dense_layers=1,
+    use_mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=0,             # v2-lite has no q compression
+    rope_head_dim=64,
+    v_head_dim=128,
+)

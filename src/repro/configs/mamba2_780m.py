@@ -1,0 +1,17 @@
+"""mamba2-780m — attention-free SSD (state-space duality).  [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                    # attention-free, FFN-free (mamba block only)
+    vocab_size=50280,
+    ssm_state_dim=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+)

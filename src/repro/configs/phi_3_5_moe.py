@@ -1,0 +1,38 @@
+"""phi-3.5-moe — paper's second target model (16 experts, top-2).  [arXiv:2412.08905]
+
+Not in the assigned pool, but required to reproduce the paper's own tables
+(Figures 10/12/14, Table 3).  Draft pairing: Phi-mini-MoE.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3.5-moe",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    vocab_size=32064,
+    ffn_activation="swiglu",
+    num_experts=16,
+    num_experts_per_tok=2,
+    moe_d_ff=6400,
+)
+
+DRAFT_CONFIG = ModelConfig(
+    name="phi-mini-moe-draft",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=960,
+    vocab_size=32064,
+    ffn_activation="swiglu",
+    num_experts=16,
+    num_experts_per_tok=2,
+    moe_d_ff=960,
+)

@@ -1,0 +1,64 @@
+"""``--arch`` id -> ModelConfig registry (assigned pool + paper's own pairs)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+from repro.configs import (
+    granite_20b,
+    command_r_35b,
+    nemotron_4_340b,
+    llama3_2_3b,
+    whisper_medium,
+    llava_next_mistral_7b,
+    deepseek_v2_lite_16b,
+    mixtral_8x7b,
+    zamba2_7b,
+    mamba2_780m,
+    phi_3_5_moe,
+)
+
+# The 10 assigned architectures (dry-run / roofline matrix).
+ASSIGNED: Dict[str, ModelConfig] = {
+    "granite-20b": granite_20b.CONFIG,
+    "command-r-35b": command_r_35b.CONFIG,
+    "nemotron-4-340b": nemotron_4_340b.CONFIG,
+    "llama3.2-3b": llama3_2_3b.CONFIG,
+    "whisper-medium": whisper_medium.CONFIG,
+    "llava-next-mistral-7b": llava_next_mistral_7b.CONFIG,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b.CONFIG,
+    "mixtral-8x7b": mixtral_8x7b.CONFIG,
+    "zamba2-7b": zamba2_7b.CONFIG,
+    "mamba2-780m": mamba2_780m.CONFIG,
+}
+
+# Paper-only extras (reproduction benchmarks).
+EXTRAS: Dict[str, ModelConfig] = {
+    "phi-3.5-moe": phi_3_5_moe.CONFIG,
+}
+
+ARCHS: Dict[str, ModelConfig] = {**ASSIGNED, **EXTRAS}
+
+# SP-MoE draft-model pairings (paper Table 1).  The deepseek draft is the
+# AWQ-quantized same architecture; in this framework a draft config with the
+# same dims stands in (quantization is a numerics detail, not a shape one).
+DRAFTS: Dict[str, ModelConfig] = {
+    "mixtral-8x7b": mixtral_8x7b.DRAFT_CONFIG,
+    "phi-3.5-moe": phi_3_5_moe.DRAFT_CONFIG,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b.CONFIG,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown --arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_draft_config(arch: str) -> Optional[ModelConfig]:
+    return DRAFTS.get(arch)
+
+
+def arch_ids() -> Tuple[str, ...]:
+    return tuple(ASSIGNED.keys())

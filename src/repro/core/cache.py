@@ -1,0 +1,153 @@
+"""Device-side expert cache with LRU eviction (paper §3.3 / §4.4).
+
+The cache is a fixed pool of ``slots`` expert-weight buffers resident in
+device memory (HBM), plus host-side bookkeeping:
+
+* ``table``   ExpertKey -> slot (the page table)
+* ``lru``     access order (OrderedDict; head = eviction candidate)
+
+Slot buffers are updated with donated jitted scatters so the pool is updated
+in place — no reallocation, no copy-back to host on eviction (§7: classic
+space-time tradeoff, experts always stay host-resident).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ExpertKey = Tuple[int, int]   # (layer, expert)
+
+
+def _batched_insert(bufs, stacked, slots):
+    """bufs: dict name -> [slots, ...]; stacked: dict name -> [n, ...]."""
+    return {name: bufs[name].at[slots].set(stacked[name]) for name in bufs}
+
+
+class ExpertCache:
+    """LRU cache of expert weights in device memory.
+
+    Thread-safe: the prefetch worker and the compute loop both mutate it.
+    """
+
+    def __init__(self, num_slots: int, buffer_shapes: Dict[str, tuple],
+                 dtype=jnp.bfloat16):
+        self.num_slots = num_slots
+        self.dtype = dtype
+        self.bufs = {name: jnp.zeros((num_slots,) + tuple(shape), dtype)
+                     for name, shape in buffer_shapes.items()}
+        self.table: Dict[ExpertKey, int] = {}
+        self.lru: "OrderedDict[ExpertKey, int]" = OrderedDict()
+        self.free: List[int] = list(range(num_slots))
+        self.lock = threading.RLock()
+        self._insert = jax.jit(_batched_insert, donate_argnums=(0,))
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.prefetch_evicted = 0   # evicted before ever being used
+
+    # ------------------------------------------------------------------ reads
+    def contains(self, key: ExpertKey) -> bool:
+        with self.lock:
+            return key in self.table
+
+    def lookup(self, keys: Sequence[ExpertKey], touch: bool = True
+               ) -> Tuple[Dict[ExpertKey, int], List[ExpertKey]]:
+        """Split into (hits: key->slot, misses).  Updates LRU + stats."""
+        with self.lock:
+            hits, misses = {}, []
+            for k in keys:
+                if k in self.table:
+                    hits[k] = self.table[k]
+                    self.hits += 1
+                    if touch:
+                        self.lru.move_to_end(k)
+                        self.lru[k] = 1    # mark used
+                else:
+                    misses.append(k)
+                    self.misses += 1
+            return hits, misses
+
+    def slots_of(self, keys: Sequence[ExpertKey]) -> jnp.ndarray:
+        with self.lock:
+            return jnp.array([self.table[k] for k in keys], jnp.int32)
+
+    # ----------------------------------------------------------------- writes
+    def _allocate(self, n: int) -> List[int]:
+        """Reserve n slots, evicting LRU entries as needed.  Lock held."""
+        if n > self.num_slots:
+            raise ValueError(
+                f"batch of {n} experts exceeds cache capacity "
+                f"{self.num_slots}; load in waves (see runtime._verify_block)")
+        slots = []
+        while len(slots) < n:
+            if self.free:
+                slots.append(self.free.pop())
+                continue
+            victim, used = self.lru.popitem(last=False)
+            slots.append(self.table.pop(victim))
+            self.evictions += 1
+            if not used:
+                self.prefetch_evicted += 1
+        return slots
+
+    def insert(self, keys: Sequence[ExpertKey],
+               host_arrays: Dict[str, np.ndarray],
+               mark_used: bool = False) -> List[int]:
+        """Batched I/O (paper §3.3): one device transfer + one donated scatter
+        for the whole group of experts.  host_arrays: name -> [n, ...].
+        """
+        if not keys:
+            return []
+        with self.lock:
+            fresh = [k for k in keys if k not in self.table]
+            if fresh:
+                sel = [i for i, k in enumerate(keys) if k not in self.table]
+                slots = self._allocate(len(fresh))
+                stacked = {name: jax.device_put(arr[sel].astype(self.dtype))
+                           for name, arr in host_arrays.items()}
+                slot_arr = jnp.array(slots, jnp.int32)
+                self.bufs = self._insert(self.bufs, stacked, slot_arr)
+                for k, s in zip(fresh, slots):
+                    self.table[k] = s
+                    self.lru[k] = 1 if mark_used else 0
+                    self.lru.move_to_end(k)
+            # refresh LRU position of already-present keys
+            for k in keys:
+                if k in self.lru:
+                    self.lru.move_to_end(k)
+            return [self.table[k] for k in keys]
+
+    def wait(self):
+        """Barrier: ensure all in-flight buffer updates are materialized."""
+        jax.block_until_ready(jax.tree.leaves(self.bufs))
+
+    # ------------------------------------------------------------------ stats
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def reset_stats(self):
+        with self.lock:
+            self.hits = self.misses = self.evictions = self.prefetch_evicted = 0
+
+    def check_invariants(self) -> bool:
+        """Property-test hook: page table and LRU agree, no slot aliasing."""
+        with self.lock:
+            if set(self.table.keys()) != set(self.lru.keys()):
+                return False
+            slots = list(self.table.values())
+            if len(slots) != len(set(slots)):
+                return False
+            if any(s < 0 or s >= self.num_slots for s in slots):
+                return False
+            if set(slots) & set(self.free):
+                return False
+            if len(slots) + len(self.free) != self.num_slots:
+                return False
+            return True

@@ -1,0 +1,51 @@
+"""Host-resident expert store (the offloaded side of the cache).
+
+All expert weights stay in host memory for the lifetime of the engine —
+eviction never copies back (paper §7).  ``fetch`` performs the batched read:
+one contiguous ``np.stack`` per weight tensor, which the ExpertCache turns
+into a single device transfer.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cache import ExpertKey
+
+
+class HostExpertStore:
+    """Extracts per-(layer, expert) weights from a target model's params and
+    keeps them as host numpy arrays."""
+
+    def __init__(self, cfg: ModelConfig, params):
+        assert cfg.is_moe, "HostExpertStore requires an MoE config"
+        self.cfg = cfg
+        moe = params["layers"]["moe"]        # stacked [L_moe, E, ...]
+        self.names = [n for n in ("wg", "wu", "wd") if n in moe]
+        self._store = {n: np.asarray(moe[n]) for n in self.names}
+        self.num_layers = self._store[self.names[0]].shape[0]
+        self.num_experts = self._store[self.names[0]].shape[1]
+
+    def buffer_shapes(self) -> Dict[str, tuple]:
+        return {n: self._store[n].shape[2:] for n in self.names}
+
+    def expert_bytes(self) -> int:
+        return int(sum(self._store[n][0, 0].nbytes for n in self.names))
+
+    def fetch(self, keys: Sequence[ExpertKey]) -> Dict[str, np.ndarray]:
+        """Batched host read: name -> [len(keys), ...]."""
+        ls = [k[0] for k in keys]
+        es = [k[1] for k in keys]
+        return {n: self._store[n][ls, es] for n in self.names}
+
+    def strip_experts(self, params):
+        """Return params with expert tensors removed (host-only now) — the
+        resident footprint the offload engine actually keeps on device."""
+        import jax.numpy as jnp
+        out = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+        for n in self.names:
+            out["layers"]["moe"][n] = jnp.zeros((0,), jnp.bfloat16)
+        return out

@@ -1,0 +1,113 @@
+"""Pipelined prefetch runtime (paper §3.3, Algorithm 2).
+
+A dedicated worker thread drains a prefetching task queue and executes
+batched loads into the ExpertCache.  Each task carries an "enqueue complete"
+event (the cuda.Event analogue — here a threading.Event resolved by the
+producer) so the worker never consumes half-prepared task descriptors, and a
+"done" event the compute loop can wait on for just-in-time arrival.
+
+Two executor flavours mirror the paper's ablation (Figure 8/12):
+
+* ``vanilla``  layer-triggered, synchronous: the producer thread itself loads
+               and blocks (I/O serializes with compute).
+* ``worker``   continuous background prefetching on the worker thread; with
+               ``batched=True`` all experts of a task are loaded in one
+               transfer (batched I/O), otherwise one transfer per expert.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.cache import ExpertCache, ExpertKey
+from repro.core.offload import HostExpertStore
+
+
+@dataclass
+class PrefetchTask:
+    keys: List[ExpertKey]
+    ready: threading.Event                 # producer-side enqueue checkpoint
+    done: threading.Event = field(default_factory=threading.Event)
+    cancelled: bool = False
+
+
+class Prefetcher:
+    def __init__(self, store: HostExpertStore, cache: ExpertCache,
+                 mode: str = "worker", batched: bool = True):
+        assert mode in ("vanilla", "worker", "off")
+        self.store = store
+        self.cache = cache
+        self.mode = mode
+        self.batched = batched
+        self.queue: "queue.Queue[Optional[PrefetchTask]]" = queue.Queue()
+        self.loaded_count = 0
+        self.io_events: List[int] = []     # batch sizes, for kernel-launch accounting
+        self._thread: Optional[threading.Thread] = None
+        if mode == "worker":
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+
+    # ---------------------------------------------------------------- produce
+    def submit(self, keys: Sequence[ExpertKey]) -> Optional[PrefetchTask]:
+        """Predictor-side enqueue (Algorithm 1 lines 7-8).  Cached experts are
+        skipped by the caller via cache.lookup(touch=False)."""
+        if self.mode == "off" or not keys:
+            return None
+        task = PrefetchTask(keys=list(keys), ready=threading.Event())
+        task.ready.set()                   # descriptor fully prepared
+        if self.mode == "vanilla":
+            self._execute(task)            # synchronous: blocks the producer
+        else:
+            self.queue.put(task)
+        return task
+
+    # ---------------------------------------------------------------- consume
+    def _run(self):
+        while True:
+            task = self.queue.get()
+            if task is None:
+                return
+            task.ready.wait()              # Algorithm 2 line 5
+            if not task.cancelled:
+                self._execute(task)
+            task.done.set()
+
+    def _execute(self, task: PrefetchTask):
+        keys = [k for k in task.keys if not self.cache.contains(k)]
+        if not keys:
+            task.done.set()
+            return
+        if self.batched:
+            arrays = self.store.fetch(keys)
+            self.cache.insert(keys, arrays)          # one transfer + scatter
+            self.io_events.append(len(keys))
+        else:
+            for k in keys:                            # per-expert sync I/O
+                arrays = self.store.fetch([k])
+                self.cache.insert([k], arrays)
+                self.io_events.append(1)
+        self.loaded_count += len(keys)
+        task.done.set()
+
+    # ------------------------------------------------------------------ admin
+    def drain(self):
+        """Block until the queue is empty and transfers have landed."""
+        self.queue.join() if False else None
+        while not self.queue.empty():
+            import time
+            time.sleep(0.001)
+        self.cache.wait()
+
+    def stop(self):
+        if self._thread is not None:
+            self.queue.put(None)
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def __del__(self):
+        try:
+            self.stop()
+        except Exception:
+            pass

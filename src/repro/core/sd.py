@@ -1,0 +1,189 @@
+"""Speculative decoding engine (draft-then-verify, greedy acceptance).
+
+Semantics follow Leviathan et al. [20] with greedy (temperature-0) decoding,
+matching the paper (§7: "SP-MoE adopts greedy decoding").  The engine is
+LOSSLESS: the emitted sequence is bit-identical to target-only greedy
+decoding — property-tested in tests/test_sd.py.
+
+Invariant: caches hold absolute positions 0..pos-1; ``cur`` is the token at
+position ``pos`` that has not been fed yet.  One iteration:
+
+  drafting     draft model autoregressively proposes d_1..d_N from cur,
+               emitting per-layer gate-input taps for the SP-MoE predictor;
+  verification target runs ONE forward over the block [cur, d_1..d_N]
+               (N+1 positions) and greedily accepts the longest matching
+               prefix, then appends the correction/bonus token g_n.
+
+Rejected positions leave stale cache slots; they are always overwritten by
+the next iteration's block before they can be attended (the next block
+starts at pos+n+1 and spans N+1 >= remaining stale positions).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SDStepOut(NamedTuple):
+    tokens: jax.Array        # [N+1] emitted tokens, -1 padded beyond n_emitted
+    n_emitted: jax.Array     # scalar in [1, N+1]
+    n_accepted: jax.Array    # scalar in [0, N]  (accepted draft tokens)
+    cur: jax.Array           # [B,1] next cur token
+    pos: jax.Array           # new pos
+    dcache: Any
+    tcache: Any
+    draft_tokens: jax.Array  # [N] proposed drafts (for analytics)
+    taps: Any                # draft taps, stacked [N, ...] (predictor input)
+
+
+def make_sd_step(draft_model, target_model, draft_len: int,
+                 collect_taps: bool = False):
+    """Build a jittable SD step for batch-size-1 decoding (paper §4.2)."""
+    N = draft_len
+
+    def sd_step(dparams, tparams, dcache, tcache, cur, pos) -> SDStepOut:
+        B = cur.shape[0]
+
+        # ---- drafting stage (autoregressive scan over the draft model) ----
+        def draft_body(carry, _):
+            tok, cache, p = carry
+            logits, cache, taps = draft_model.decode_step(
+                dparams, cache, tok, p, collect_taps=collect_taps)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, cache, p + 1), (nxt[:, 0], taps)
+
+        (_, dcache2, _), (drafts, taps) = jax.lax.scan(
+            draft_body, (cur, dcache, pos), None, length=N)
+        drafts = drafts.T                                   # [B, N]
+
+        # ---- verification stage (single parallel target forward) ----
+        block = jnp.concatenate([cur, drafts], axis=1)      # [B, N+1]
+        tlogits, tcache2, _ = target_model.decode_step(tparams, tcache, block, pos)
+        greedy = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)  # [B, N+1] g_0..g_N
+
+        # ---- greedy acceptance (batch row 0; engine is B=1) ----
+        d = drafts[0]                                       # [N]
+        g = greedy[0]                                       # [N+1]
+        match = d == g[:N]
+        acc_prefix = jnp.cumprod(match.astype(jnp.int32))
+        n_acc = jnp.sum(acc_prefix)                         # in [0, N]
+        n_emit = n_acc + 1
+        idx = jnp.arange(N + 1)
+        emitted = jnp.where(idx < n_acc, jnp.concatenate([d, jnp.zeros((1,), jnp.int32)]),
+                            jnp.where(idx == n_acc, g[n_acc], -1))
+        cur_next = g[n_acc][None, None].astype(jnp.int32)
+        cur_next = jnp.broadcast_to(cur_next, (B, 1))
+        return SDStepOut(tokens=emitted, n_emitted=n_emit, n_accepted=n_acc,
+                         cur=cur_next, pos=pos + n_emit, dcache=dcache2,
+                         tcache=tcache2, draft_tokens=d, taps=taps)
+
+    return sd_step
+
+
+def sd_generate(draft_model, target_model, dparams, tparams,
+                prompt: jax.Array, max_new_tokens: int, draft_len: int,
+                max_seq: int) -> Tuple[jax.Array, Dict[str, float]]:
+    """Python-driven generation loop (used by tests/examples; the offload
+    runtime drives the same pieces with prefetching interleaved).
+
+    prompt: [1, P] -> (tokens [<= max_new_tokens], stats).
+    """
+    assert prompt.shape[0] == 1, "SD engine is batch-1 (paper §4.2)"
+    step = jax.jit(make_sd_step(draft_model, target_model, draft_len))
+    tlog, tcache = target_model.prefill(tparams, prompt, max_seq)
+    _, dcache = draft_model.prefill(dparams, prompt, max_seq)
+    cur = jnp.argmax(tlog, axis=-1).astype(jnp.int32)[:, None]
+    pos = prompt.shape[1]
+    out = [int(cur[0, 0])]
+    iters, accepted = 0, 0
+    while len(out) < max_new_tokens:
+        res = step(dparams, tparams, dcache, tcache, cur, jnp.int32(pos))
+        n = int(res.n_emitted)
+        toks = [int(t) for t in res.tokens[:n]]
+        out.extend(toks)
+        cur, pos, dcache, tcache = res.cur, int(res.pos), res.dcache, res.tcache
+        iters += 1
+        accepted += int(res.n_accepted)
+    stats = {
+        "iterations": iters,
+        "acceptance_rate": accepted / max(iters * draft_len, 1),
+        "tokens_per_iteration": len(out) / max(iters, 1),
+    }
+    return jnp.array(out[:max_new_tokens], jnp.int32), stats
+
+
+def sd_generate_adaptive(draft_model, target_model, dparams, tparams,
+                         prompt: jax.Array, max_new_tokens: int, max_seq: int,
+                         min_len: int = 1, max_len: int = 8,
+                         ewma: float = 0.5) -> Tuple[jax.Array, Dict[str, float]]:
+    """Beyond-paper: acceptance-adaptive draft length.
+
+    The paper fixes N per run (Fig. 13 sweeps it offline).  This controller
+    tracks an EWMA of the per-iteration acceptance fraction and grows/
+    shrinks N online: high acceptance -> longer drafts amortize the target's
+    weight stream further (see EXPERIMENTS.md §Perf cell 1); low acceptance
+    -> shorter drafts stop wasting draft compute + prefetch bandwidth.
+    Lossless for any schedule (greedy acceptance is N-oblivious).
+    """
+    assert prompt.shape[0] == 1
+    steps = {}
+
+    def step_for(n):
+        if n not in steps:
+            steps[n] = jax.jit(make_sd_step(draft_model, target_model, n))
+        return steps[n]
+
+    tlog, tcache = target_model.prefill(tparams, prompt, max_seq)
+    _, dcache = draft_model.prefill(dparams, prompt, max_seq)
+    cur = jnp.argmax(tlog, axis=-1).astype(jnp.int32)[:, None]
+    pos = prompt.shape[1]
+    out = [int(cur[0, 0])]
+    n = min_len
+    acc_ewma = 0.5
+    iters = accepted = drafted = 0
+    lens = []
+    while len(out) < max_new_tokens:
+        res = step_for(n)(dparams, tparams, dcache, tcache, cur, jnp.int32(pos))
+        k = int(res.n_emitted)
+        out.extend(int(t) for t in res.tokens[:k])
+        cur, pos, dcache, tcache = res.cur, int(res.pos), res.dcache, res.tcache
+        frac = int(res.n_accepted) / max(n, 1)
+        acc_ewma = (1 - ewma) * acc_ewma + ewma * frac
+        accepted += int(res.n_accepted)
+        drafted += n
+        lens.append(n)
+        iters += 1
+        # ±1 steps keep the stale-cache overwrite invariant: the next block
+        # (N_new+1 tokens from pos+n+1) must cover the previous iteration's
+        # rejected writes (N_prev-n positions); N_new >= N_prev-1 suffices.
+        if acc_ewma > 0.8 and n < max_len:
+            n += 1
+        elif acc_ewma < 0.4 and n > min_len:
+            n -= 1
+    return jnp.array(out[:max_new_tokens], jnp.int32), {
+        "iterations": iters,
+        "acceptance_rate": accepted / max(drafted, 1),
+        "tokens_per_iteration": len(out) / max(iters, 1),
+        "final_draft_len": lens[-1] if lens else min_len,
+        "mean_draft_len": float(np.mean(lens)) if lens else float(min_len),
+    }
+
+
+def greedy_generate(model, params, prompt: jax.Array, max_new_tokens: int,
+                    max_seq: int) -> jax.Array:
+    """Vanilla autoregressive greedy decoding (the lossless reference)."""
+    logits, cache = model.prefill(params, prompt, max_seq)
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    pos = prompt.shape[1]
+    out = [int(cur[0, 0])]
+    step = jax.jit(lambda p, c, t, ps: model.decode_step(p, c, t, ps))
+    while len(out) < max_new_tokens:
+        lg, cache, _ = step(params, cache, cur, jnp.int32(pos))
+        cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(int(cur[0, 0]))
+        pos += 1
+    return jnp.array(out[:max_new_tokens], jnp.int32)

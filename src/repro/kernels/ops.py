@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels with automatic backend
+dispatch: real Mosaic lowering on TPU, interpret mode elsewhere (bit-accurate
+kernel-body execution — how this CPU container validates them), or the pure
+jnp oracle via ``impl='ref'``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              impl: str = "auto"):
+    """Prefill attention.  impl: auto | kernel | interpret | ref."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=(impl == "interpret" or not _on_tpu()))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def decode_attention(q, k, v, lengths, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.decode_attention_ref(q, k, v, lengths)
+    return _decode(q, k, v, lengths,
+                   interpret=(impl == "interpret" or not _on_tpu()))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def moe_gemm(xg, wg, wu, wd, valid, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.moe_gemm_ref(xg, wg, wu, wd, valid)
+    return _moe_gemm(xg, wg, wu, wd, valid,
+                     interpret=(impl == "interpret" or not _on_tpu()))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, A, B, C, chunk: int, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.ssd_ref(x, dt, A, B, C, chunk)[0]
+    return _ssd(x, dt, A, B, C, chunk,
+                interpret=(impl == "interpret" or not _on_tpu()))

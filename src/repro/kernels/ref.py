@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for every Pallas kernel.  These are the ground truth the
+kernels are validated against (tests/test_kernels.py) and double as the
+portable fallback path on backends without Pallas.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle (causal + sliding window + GQA)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: [B,Sq,H,D], k/v: [B,Skv,Hkv,D] -> [B,Sq,H,D].  f32 softmax."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, D)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32) / np.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkrqs,bskd->bqkrd", p, v).reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# decode attention oracle (single query vs long KV)
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array) -> jax.Array:
+    """q: [B,H,D], k/v: [B,S,Hkv,D], length: [B] valid prefix -> [B,H,D]."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bkrd,bskd->bkrs", qg, k).astype(jnp.float32) / np.sqrt(D)
+    valid = jnp.arange(S)[None, :] < length[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkrs,bskd->bkrd", p, v).reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# grouped expert GEMM oracle (capacity-gathered MoE compute)
+# ---------------------------------------------------------------------------
+
+def moe_gemm_ref(xg: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
+                 valid: jax.Array) -> jax.Array:
+    """xg: [E,C,d]; wg/wu: [E,d,f]; wd: [E,f,d]; valid: [E,C] -> [E,C,d].
+
+    SwiGLU expert FFN applied per expert block, invalid slots zeroed.
+    """
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", xg, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd)
+    return y * valid[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space dual) chunked scan oracle
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., L] -> [..., L, L] with out[i,j] = sum_{j<t<=i} x[t] (causal)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+            B: jax.Array, C: jax.Array, chunk: int,
+            init_state: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (Mamba2, alg. 1 of arXiv:2405.21060), single group.
+
+    x: [b,s,h,p]  dt: [b,s,h]  A: [h] (negative)  B,C: [b,s,n]
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).  All math in f32.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, n).astype(f32)
+    dA = dtc * A.astype(f32)                                   # [b,nc,l,h]
+    dA_cum = jnp.cumsum(dA, axis=2)                            # inclusive
+    # --- intra-chunk (diagonal blocks) ---
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # [b,nc,h,l,l]
+    CB = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)                 # [b,nc,l,l]
+    y_diag = jnp.einsum("bcls,bchls,bcsh,bcshp->bclhp",
+                        CB, Lmat, dtc, xc)
+    # --- chunk states ---
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)      # [b,nc,l,h]
+    states = jnp.einsum("bcln,bclh,bclh,bclhp->bchpn",
+                        Bc, decay_to_end, dtc, xc)             # [b,nc,h,p,n]
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                 # [b,nc,h]
+    s0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                       # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [b,nc,h,p,n]
+    # --- off-diagonal contribution ---
+    state_decay = jnp.exp(dA_cum)                              # decay from chunk start
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_ref(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                   B: jax.Array, C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent step.  state: [b,h,p,n]; x: [b,h,p];
+    dt: [b,h]; A: [h]; B,C: [b,n] -> (y [b,h,p], new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))               # [b,h]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32), B.astype(f32))
+    new = state.astype(f32) * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, C.astype(f32))
+    return y.astype(x.dtype), new.astype(state.dtype)

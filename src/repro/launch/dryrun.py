@@ -1,0 +1,341 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and extract memory / cost / collective statistics.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, OOM-at-compile, or unsupported collective
+fails the cell.  Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape decode_32k --multi-pod both --out results.json
+"""
+# The dry-run (and ONLY the dry-run) fabricates 512 host devices so
+# jax.make_mesh can build the production mesh.  MUST precede any jax import.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ALL_SHAPES, SHAPES, RunConfig, ShapeConfig,
+                                shape_applicable)
+from repro.configs.registry import ASSIGNED, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as SH
+from repro.models.costmodel import roofline_terms
+from repro.models.registry import build_model, decode_input_specs, input_specs
+from repro.models.train import make_train_step
+from repro.optim.optimizer import make_optimizer, warmup_cosine
+
+# matches `%name = <shape> <op>(...)` — the op is on the RHS (instruction
+# names may use underscores, e.g. %all_gather.24 = f32[...] all-gather(...))
+_COLL_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+\[[0-9,]*\])[^\n]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    Per-device, and scan bodies appear once (XLA does not unroll) — the
+    analytical model in models/costmodel.py provides trip-count-scaled
+    totals; this parse proves which collectives the partitioner inserted.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_s, op = m.group(1), m.group(2)
+        sm = _SHAPE_RE.match(shape_s)
+        if not sm:
+            continue
+        dt, dims = sm.group(1), sm.group(2)
+        n = int(np.prod([int(x) for x in dims.split(",") if x])) if dims else 1
+        nbytes = n * _DTYPE_BYTES.get(dt, 4)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += float(nbytes)
+    return out
+
+
+def _batch_shard(mesh, specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Batch inputs sharded over (pod, data) when the dim divides (long_500k
+    has global_batch=1 -> replicated)."""
+    out = {}
+    for k, v in specs.items():
+        dp = SH._fit(v.shape[0], mesh, SH.data_axes(mesh))
+        out[k] = NamedSharding(mesh, P(dp, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def plan_microbatch(cfg, shape, mesh) -> int:
+    """Gradient-accumulation depth so per-microbatch activations fit HBM."""
+    dp = SH.mesh_axis_size(mesh, SH.data_axes(mesh))
+    b_local = max(shape.global_batch // dp, 1)
+    model = SH.mesh_axis_size(mesh, "model")
+    seq_div = model if cfg.d_model % model == 0 else 1
+    layers = cfg.num_layers + (cfg.encoder_layers or 0)
+    per_sample = shape.seq_len * cfg.d_model * 2 * layers / seq_div
+    budget = 4e9
+    micro = 1
+    while micro < b_local and (b_local / micro) * per_sample > budget:
+        micro *= 2
+    return micro
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, optimizer: str = "adamw",
+               weight_gather: Optional[bool] = None, verify_block: int = 1,
+               capacity_factor: Optional[float] = None,
+               remat_override: Optional[bool] = None,
+               remat_policy: Optional[str] = None,
+               seq_parallel: bool = False,
+               extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh) cell.
+
+    The keyword knobs are the §Perf hillclimb levers: ``weight_gather``
+    (ZeRO-style serving), ``verify_block`` (SD verification block size for
+    decode cells — the paper's technique in production form),
+    ``capacity_factor`` / ``remat_override`` (training efficiency knobs).
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if capacity_factor is not None:
+        cfg = _dc.replace(cfg, capacity_factor=capacity_factor)
+    if remat_override is not None:
+        cfg = _dc.replace(cfg, remat=remat_override)
+    if remat_policy is not None:
+        cfg = _dc.replace(cfg, remat_policy=remat_policy)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    model = build_model(cfg)
+    t0 = time.time()
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    mode = "train" if shape.kind == "train" else "serve"
+    pspecs = SH.param_pspecs(cfg, params_shapes, mesh, mode=mode,
+                             weight_gather=weight_gather)
+    pshard = SH.to_shardings(mesh, pspecs)
+    dp = P(SH.data_axes(mesh))
+
+    if shape.kind == "train":
+        micro = plan_microbatch(cfg, shape, mesh)
+        run = RunConfig(microbatch=micro, optimizer=optimizer)
+        opt = make_optimizer(optimizer, warmup_cosine(3e-4, 100, 10000))
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        # optimizer states mirror the param shardings; the step counter is
+        # replicated.  (AdamState = (step, m, v).)
+        opt_specs = opt_shapes.__class__(P(), pspecs, pspecs)
+        opt_shard = SH.to_shardings(mesh, opt_specs)
+        step_fn = make_train_step(model, cfg, run, opt)
+        ispecs = input_specs(cfg, shape)
+        batch_shard = _batch_shard(mesh, ispecs)
+        with mesh:
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pshard, opt_shard, batch_shard),
+                             out_shardings=(pshard, opt_shard, None))
+            lowered = jitted.lower(params_shapes, opt_shapes, ispecs)
+            compiled = lowered.compile()
+        fn_desc = f"train_step(micro={micro})"
+    elif shape.kind == "prefill" and seq_parallel and cfg.family == "ssm":
+        from repro.models.mamba_sp import seq_parallel_forward
+        ispecs = input_specs(cfg, shape)
+        # weights fully replicated; sequence sharded over the model axis
+        repl = jax.tree.map(lambda _: P(), params_shapes)
+        pshard = SH.to_shardings(mesh, repl)
+        tokshard = NamedSharding(mesh, P(SH.data_axes(mesh), "model"))
+
+        def prefill_fn(params, tokens):
+            return seq_parallel_forward(params, tokens, cfg, mesh)
+
+        with mesh:
+            jitted = jax.jit(prefill_fn, in_shardings=(pshard, tokshard),
+                             out_shardings=None)
+            lowered = jitted.lower(params_shapes, ispecs["tokens"])
+            compiled = lowered.compile()
+        fn_desc = "prefill_forward(seq_parallel)"
+    elif shape.kind == "prefill":
+        ispecs = input_specs(cfg, shape)
+        batch_shard = _batch_shard(mesh, ispecs)
+
+        if cfg.family == "encdec":
+            def prefill_fn(params, tokens, frames):
+                logits, _ = model.forward(params, tokens, frames)
+                return logits[:, -1]
+            args = (params_shapes, ispecs["tokens"], ispecs["frames"])
+            ishard = (pshard, batch_shard["tokens"], batch_shard["frames"])
+        elif cfg.family == "vlm":
+            def prefill_fn(params, tokens, patches):
+                logits, _ = model.forward(params, tokens, patch_embeds=patches)
+                return logits[:, -1]
+            args = (params_shapes, ispecs["tokens"], ispecs["patch_embeds"])
+            ishard = (pshard, batch_shard["tokens"], batch_shard["patch_embeds"])
+        else:
+            def prefill_fn(params, tokens):
+                logits, _ = model.forward(params, tokens)
+                return logits[:, -1]
+            args = (params_shapes, ispecs["tokens"])
+            ishard = (pshard, batch_shard["tokens"])
+        with mesh:
+            jitted = jax.jit(prefill_fn, in_shardings=ishard, out_shardings=None)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        fn_desc = "prefill_forward"
+    else:  # decode
+        dspecs = decode_input_specs(cfg, shape)
+        if verify_block > 1:   # SD verification block: Sq tokens per step
+            B = dspecs["tokens"].shape[0]
+            dspecs["tokens"] = jax.ShapeDtypeStruct((B, verify_block),
+                                                    jnp.int32)
+        cache_specs = SH.cache_pspecs(cfg, dspecs["cache"], mesh)
+        cache_shard = SH.to_shardings(mesh, cache_specs)
+        tok_shard = _batch_shard(mesh, {"tokens": dspecs["tokens"]})["tokens"]
+
+        def serve_step(params, cache, tokens, pos):
+            logits, new_cache, _ = model.decode_step(params, cache, tokens, pos)
+            return logits, new_cache
+
+        with mesh:
+            jitted = jax.jit(serve_step,
+                             in_shardings=(pshard, cache_shard, tok_shard, None),
+                             out_shardings=(None, cache_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, dspecs["cache"],
+                                   dspecs["tokens"], dspecs["pos"])
+            compiled = lowered.compile()
+        fn_desc = f"serve_step(block={verify_block})"
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if weight_gather is None:    # mirror param_pspecs' serve auto-decision
+        total_b = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                      for l in jax.tree.leaves(params_shapes))
+        weight_gather = (mode == "serve" and
+                         total_b / mesh_shape.get("model", 1) > 10e9)
+    analytical = roofline_terms(cfg, shape, mesh_shape, mode,
+                                weight_gather=weight_gather,
+                                verify_block=verify_block,
+                                capacity_factor=capacity_factor,
+                                remat=remat_override)
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok", "fn": fn_desc,
+        "mesh": mesh_shape,
+        "weight_gather": bool(weight_gather),
+        "verify_block": verify_block,
+        "capacity_factor": capacity_factor,
+        "remat_override": remat_override,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": (mem.argument_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                + mem.output_size_in_bytes
+                                - mem.alias_size_in_bytes),
+        },
+        "xla_cost": {"flops_per_device_body": cost.get("flops", 0.0),
+                     "bytes_per_device_body": cost.get("bytes accessed", 0.0)},
+        "hlo_collectives": colls,
+        "roofline": analytical,
+    }
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=("no", "yes", "both"), default="both")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--out", default="dryrun_results.json")
+    # §Perf hillclimb knobs
+    ap.add_argument("--weight-gather", choices=("auto", "on", "off"),
+                    default="auto")
+    ap.add_argument("--verify-block", type=int, default=1)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--remat-policy", choices=("full", "selective"),
+                    default=None)
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="ssm prefill: sequence-parallel mamba (replicated "
+                         "weights, sharded sequence, state handoff)")
+    ap.add_argument("--tag", default=None, help="label stored in the record")
+    args = ap.parse_args()
+    wg = {"auto": None, "on": True, "off": False}[args.weight_gather]
+
+    archs = list(ASSIGNED) if args.arch == "all" else args.arch.split(",")
+    shapes = ([s.name for s in ALL_SHAPES] if args.shape == "all"
+              else args.shape.split(","))
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], json.dumps(r.get("mesh", {}), sort_keys=True),
+             r.get("tag")) for r in results}
+
+    for multi_pod in pods:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_key = json.dumps(dict(zip(mesh.axis_names, mesh.devices.shape)),
+                              sort_keys=True)
+        for arch in archs:
+            for shape in shapes:
+                if (arch, shape, mesh_key, args.tag) in done:
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_key} ...", flush=True)
+                try:
+                    rec = lower_cell(
+                        arch, shape, mesh, optimizer=args.optimizer,
+                        weight_gather=wg, verify_block=args.verify_block,
+                        capacity_factor=args.capacity_factor,
+                        remat_override=(False if args.no_remat else None),
+                        remat_policy=args.remat_policy,
+                        seq_parallel=args.seq_parallel,
+                        extra={"tag": args.tag} if args.tag else None)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=float)
+                status = rec["status"]
+                if status == "ok":
+                    m = rec["memory"]["peak_per_device"] / 1e9
+                    print(f"  OK peak/device={m:.2f} GB "
+                          f"dominant={rec['roofline']['dominant']} "
+                          f"({rec['compile_s']}s)", flush=True)
+                else:
+                    print(f"  {status.upper()}: {rec.get('reason', rec.get('error'))}",
+                          flush=True)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,88 @@
+"""Serving driver: SP-MoE offload engine (paper mode) or plain SD serving.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --policy spmoe --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_draft_config
+from repro.core.runtime import OffloadEngine
+from repro.core.sd import greedy_generate, sd_generate
+from repro.models.registry import build_model
+
+
+def reduced_pair(arch: str):
+    cfg = get_config(arch).reduced(dtype="float32")
+    draft = get_draft_config(arch)
+    if draft is not None and draft.name != cfg.name:
+        dcfg = draft.reduced(dtype="float32")
+    elif cfg.is_moe:
+        dcfg = dataclasses.replace(cfg, num_experts=0, num_experts_per_tok=0,
+                                   num_shared_experts=0, first_dense_layers=0,
+                                   name=cfg.name + "-draft")
+    else:
+        dcfg = dataclasses.replace(cfg, num_layers=max(2, cfg.num_layers // 2),
+                                   name=cfg.name + "-draft")
+    return cfg, dcfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--policy", default="spmoe",
+                    choices=("spmoe", "adapmoe", "moe-infinity", "on-demand",
+                             "sd-only", "sd-adaptive", "greedy"))
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--draft-len", type=int, default=4)
+    ap.add_argument("--cache-slots", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg, dcfg = reduced_pair(args.arch)
+    target = build_model(cfg)
+    draft = build_model(dcfg)
+    tparams = target.init(jax.random.PRNGKey(0))
+    # distilled draft stand-in: same init family, different seed
+    dparams = draft.init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, args.prompt_len),
+                                0, cfg.vocab_size)
+    max_seq = args.prompt_len + args.tokens + args.draft_len + 8
+
+    if args.policy == "greedy":
+        out = greedy_generate(target, tparams, prompt, args.tokens, max_seq)
+        print("tokens:", out.tolist())
+        return
+    if args.policy == "sd-only":
+        out, stats = sd_generate(draft, target, dparams, tparams, prompt,
+                                 args.tokens, args.draft_len, max_seq)
+        print("tokens:", out.tolist())
+        print("stats:", stats)
+        return
+    if args.policy == "sd-adaptive":
+        from repro.core.sd import sd_generate_adaptive
+        out, stats = sd_generate_adaptive(draft, target, dparams, tparams,
+                                          prompt, args.tokens, max_seq)
+        print("tokens:", out.tolist())
+        print("stats:", stats)
+        return
+    assert cfg.is_moe, "offload policies need an MoE target"
+    eng = OffloadEngine(cfg, dcfg, tparams, dparams,
+                        cache_slots=args.cache_slots,
+                        draft_len=args.draft_len, policy=args.policy,
+                        max_seq=max_seq)
+    out, stats = eng.generate(prompt, args.tokens)
+    eng.close()
+    print("tokens:", out.tolist())
+    for k, v in stats.items():
+        print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Training driver: data pipeline -> pjit train step -> checkpoint ->
+fault-tolerant supervision.
+
+On real hardware this runs one process per host under the supervisor; on
+this container it drives reduced configs end-to-end on the CPU device (see
+examples/train_lm.py) and full configs through the dry-run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --reduced --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import make_pipeline
+from repro.launch.mesh import single_device_mesh
+from repro.models import sharding as SH
+from repro.models.registry import build_model
+from repro.models.train import make_train_step
+from repro.optim.optimizer import make_optimizer, warmup_cosine
+from repro.runtime.fault_tolerance import Heartbeat, StragglerDetector
+
+
+class Trainer:
+    def __init__(self, cfg, shape: ShapeConfig, run: RunConfig, mesh=None,
+                 ckpt_dir: Optional[str] = None, grad_compress: bool = False):
+        self.cfg, self.shape, self.run = cfg, shape, run
+        self.mesh = mesh if mesh is not None else single_device_mesh()
+        self.model = build_model(cfg)
+        self.opt = make_optimizer(
+            run.optimizer, warmup_cosine(run.learning_rate, run.warmup_steps,
+                                         run.total_steps),
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+        self.grad_compress = grad_compress
+        step_fn = make_train_step(self.model, cfg, run, self.opt,
+                                  grad_compress=grad_compress)
+        pshapes = jax.eval_shape(lambda: self.model.init(jax.random.PRNGKey(0)))
+        pspecs = SH.param_pspecs(cfg, pshapes, self.mesh, mode="train")
+        self.pshard = SH.to_shardings(self.mesh, pspecs)
+        self.step_fn = jax.jit(step_fn)
+        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        self.heartbeat = Heartbeat(host_id=0)
+        self.straggler = StragglerDetector()
+
+    def init_state(self, seed: int = 0):
+        with self.mesh:
+            params = jax.jit(self.model.init, out_shardings=self.pshard)(
+                jax.random.PRNGKey(seed))
+            opt_state = self.opt.init(params)
+        state: Dict[str, Any] = {"params": params, "opt": opt_state}
+        if self.grad_compress:
+            from repro.optim.grad_compress import init_error_feedback
+            state["ef"] = init_error_feedback(params)
+        return state
+
+    def restore_or_init(self, seed: int = 0):
+        state = self.init_state(seed)
+        start = 0
+        if self.ckpt is not None:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                state = self.ckpt.restore(latest, state)
+                start = latest
+        return start, state
+
+    def train(self, steps: int, ckpt_every: int = 0, seed: int = 0,
+              fail_at: Optional[int] = None, log_every: int = 10):
+        start, state = self.restore_or_init(seed)
+        pipe = make_pipeline(self.cfg, self.shape, seed=seed, start_step=start)
+        losses = []
+        try:
+            for step in range(start, steps):
+                if fail_at is not None and step == fail_at:
+                    raise RuntimeError(f"injected failure at step {step}")
+                batch = next(pipe)
+                batch = jax.tree.map(jnp.asarray, batch)
+                t0 = time.perf_counter()
+                if self.grad_compress:
+                    params, opt, ef, metrics = self.step_fn(
+                        state["params"], state["opt"], batch, state["ef"])
+                    state = {"params": params, "opt": opt, "ef": ef}
+                else:
+                    params, opt, metrics = self.step_fn(
+                        state["params"], state["opt"], batch)
+                    state = {"params": params, "opt": opt}
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                self.heartbeat.beat()
+                self.straggler.observe(0, time.perf_counter() - t0)
+                if ckpt_every and self.ckpt and (step + 1) % ckpt_every == 0:
+                    self.ckpt.save(step + 1, state)
+                if log_every and step % log_every == 0:
+                    print(f"step {step} loss {loss:.4f} "
+                          f"lr {float(metrics['lr']):.2e}", flush=True)
+        finally:
+            pipe.close()
+            if self.ckpt:
+                self.ckpt.wait()
+        return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    run = RunConfig(optimizer=args.optimizer, warmup_steps=5,
+                    total_steps=args.steps)
+    tr = Trainer(cfg, shape, run, ckpt_dir=args.ckpt_dir,
+                 grad_compress=args.grad_compress)
+    _, losses = tr.train(args.steps, ckpt_every=args.ckpt_every)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

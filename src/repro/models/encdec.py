@@ -1,0 +1,174 @@
+"""Whisper-style encoder-decoder.  The conv/audio frontend is a STUB per the
+assignment: ``input_specs`` provides precomputed frame embeddings
+``[B, encoder_seq, d_model]``.  Decoder blocks: self-attn (causal, cached) +
+cross-attn over the encoder output (K/V cached at prefill) + FFN.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.init_rms_norm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln2": L.init_rms_norm(cfg.d_model, dtype),
+            "ffn": L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_activation, dtype)}
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.init_rms_norm(cfg.d_model, dtype),
+            "self_attn": L.init_attention(ks[0], cfg, dtype),
+            "ln_x": L.init_rms_norm(cfg.d_model, dtype),
+            "cross_attn": L.init_attention(ks[1], cfg, dtype),
+            "ln2": L.init_rms_norm(cfg.d_model, dtype),
+            "ffn": L.init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_activation, dtype)}
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def init(self, key) -> Params:
+        cfg, dtype = self.cfg, self.dtype
+        ks = jax.random.split(key, 4)
+        enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+        dec_keys = jax.random.split(ks[1], cfg.num_layers)
+        return {
+            "wte": L._dense_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype,
+                                 scale=jnp.sqrt(cfg.d_model)),
+            "enc": jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(enc_keys),
+            "dec": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(dec_keys),
+            "ln_enc": L.init_rms_norm(cfg.d_model, dtype),
+            "ln_f": L.init_rms_norm(cfg.d_model, dtype),
+        }
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """frames: [B, S_enc, d] (stub frontend output) -> encoder states."""
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        full = jnp.ones((1, 1, 1, S, S), bool)      # bidirectional
+
+        def body(x, lp):
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            x = x + L.attention_forward(lp["attn"], h, cfg, mask=full)
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + L.ffn_forward(lp["ffn"], h, cfg.ffn_activation)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, frames.astype(self.dtype), params["enc"])
+        return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    # -- decoder -------------------------------------------------------------
+    def _dec_block(self, lp, x, enc_kv, cfg, mode, cache, pos):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            a, cache = L.attention_decode(lp["self_attn"], h, cache, pos, cfg)
+        else:
+            a = L.attention_forward(lp["self_attn"], h, cfg)
+        x = x + a
+        h = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        x = x + L.attention_forward(lp["cross_attn"], h, cfg,
+                                    kv_override=enc_kv, use_rope=False,
+                                    mask=None)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.ffn_forward(lp["ffn"], h, cfg.ffn_activation)
+        return x, cache
+
+    def _cross_kv(self, params: Params, enc: jax.Array):
+        """Per-decoder-layer cross-attention K/V (computed once)."""
+        def one(lp):
+            k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"])
+            return k, v
+        return jax.vmap(one)(params["dec"])        # [L, B, S_enc, H, hd]
+
+    def forward(self, params: Params, tokens: jax.Array, frames: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        kv = self._cross_kv(params, enc)
+        x = jnp.take(params["wte"], tokens, axis=0)
+
+        def body(x, xs):
+            lp, k, v = xs
+            x, _ = self._dec_block(lp, x, (k, v), cfg, "train", None, None)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, (params["dec"], kv[0], kv[1]))
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["wte"])
+        return logits, jnp.zeros((), jnp.float32)
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Params:
+        cfg = self.cfg
+        one = L.init_kv_cache(cfg, batch, max_seq, self.dtype)
+        self_kv = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+        cross = {
+            "k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                            cfg.num_kv_heads, cfg.head_dim), self.dtype),
+            "v": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                            cfg.num_kv_heads, cfg.head_dim), self.dtype),
+        }
+        return {"self": self_kv, "cross": cross}
+
+    def prefill(self, params: Params, tokens: jax.Array, max_seq: int,
+                frames: jax.Array) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        kv = self._cross_kv(params, enc)
+        cache = self.init_cache(tokens.shape[0], max_seq)
+        cache["cross"] = {"k": kv[0], "v": kv[1]}
+        x = jnp.take(params["wte"], tokens, axis=0)
+
+        def body(carry, xs):
+            x = carry
+            lp, k, v, blockc = xs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            from repro.models.transformer import _attn_prefill_cache
+            blockc = _attn_prefill_cache({"attn": lp["self_attn"]}, h, cfg,
+                                         blockc, None)
+            x, _ = self._dec_block(lp, x, (k, v), cfg, "train", None, None)
+            return x, blockc
+
+        x, self_kv = jax.lax.scan(body, x,
+                                  (params["dec"], kv[0], kv[1], cache["self"]))
+        cache["self"] = self_kv
+        x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["wte"])[:, 0]
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos, collect_taps: bool = False):
+        cfg = self.cfg
+        x = jnp.take(params["wte"], tokens, axis=0)
+
+        def body(carry, xs):
+            x = carry
+            lp, ck, cv, blockc = xs
+            x, nc = self._dec_block(lp, x, (ck, cv), cfg, "decode", blockc, pos)
+            return x, nc
+
+        x, self_kv = jax.lax.scan(
+            body, x, (params["dec"], cache["cross"]["k"], cache["cross"]["v"],
+                      cache["self"]))
+        cache = dict(cache)
+        cache["self"] = self_kv
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["wte"])
+        return logits, cache, {}

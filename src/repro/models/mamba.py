@@ -1,0 +1,120 @@
+"""Mamba2 (SSD) block: in_proj -> causal conv -> SSD -> gated RMSNorm -> out_proj.
+
+Single B/C group (ngroups=1).  Full-sequence path uses the chunked SSD scan
+(kernels/ref.ssd_ref oracle; Pallas kernel swaps in on TPU via kernels/ops).
+Decode is the O(1) recurrent update with a rolling conv state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, rms_norm
+from repro.kernels.ref import ssd_ref, ssd_decode_ref
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state_dim
+    conv_ch = d_in + 2 * N           # conv over (x, B, C)
+    return d_in, H, N, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_in, H, N, conv_ch = _dims(cfg)
+    proj_out = 2 * d_in + 2 * N + H  # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32) *
+                 (np.log(0.1) - np.log(0.001)) + np.log(0.001))
+    return {
+        "in_proj": _dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.ssm_conv_width, conv_ch), dtype, scale=1.0),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": _dense_init(ks[3], (d_in, d), dtype),
+    }
+
+
+def _split(z_x_b_c_dt: jax.Array, cfg: ModelConfig):
+    d_in, H, N, _ = _dims(cfg)
+    z, xs, B, C, dt = jnp.split(
+        z_x_b_c_dt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xs, B, C, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  xBC: [B,S,ch]; w: [W,ch]."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  init_state: Optional[jax.Array] = None) -> jax.Array:
+    """x: [B,S,d] -> [B,S,d] (full-sequence SSD)."""
+    Bsz, S, _ = x.shape
+    d_in, H, N, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split(zxbcdt, cfg)
+    xBC = _causal_conv(jnp.concatenate([xs, Bm, Cm], -1), p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xh = xs.reshape(Bsz, S, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk:  # pad to a chunk multiple (masked by dt=0 -> no state change)
+        padn = chunk - S % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, padn), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, padn), (0, 0)))
+    y, _ = ssd_ref(xh, dt, A, Bm, Cm, chunk, init_state)
+    y = y[:, :S]
+    y = y + xs.reshape(Bsz, S, H, cfg.ssm_head_dim) * p["D"][:, None]
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsp,pd->bsd", y, p["out_proj"])
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    d_in, H, N, conv_ch = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                 cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrent step.  x: [B,1,d]."""
+    Bsz = x.shape[0]
+    d_in, H, N, conv_ch = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])[:, 0]
+    z, xs, Bm, Cm, dt = _split(zxbcdt, cfg)
+    xBC_new = jnp.concatenate([xs, Bm, Cm], -1)                 # [B, ch]
+    window = jnp.concatenate([cache["conv"], xBC_new[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xh = xs.reshape(Bsz, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_decode_ref(cache["ssm"], xh, dt, A, Bm, Cm)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(Bsz, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bp,pd->bd", y, p["out_proj"])[:, None, :]
+    return out, {"ssm": new_state, "conv": window[:, 1:, :]}

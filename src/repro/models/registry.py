@@ -1,0 +1,60 @@
+"""Unified model API: build_model(cfg) + input_specs(cfg, shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+given (arch × shape) cell — the dry-run lowers against these without any
+device allocation.  Modality frontends are stubs: whisper gets precomputed
+frame embeddings, llava gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import DecoderLM
+from repro.models.encdec import EncDecLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for train/prefill forward passes."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "frames": jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt),
+        }
+    elif cfg.family == "vlm":
+        # total positions = patches + text; text seq shrinks so the cell's
+        # seq_len is the end-to-end sequence length.
+        text = max(1, S - cfg.num_patches)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, text), i32),
+            "patch_embeds": jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), dt),
+        }
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(specs["tokens"].shape, i32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for one serve_step: new token + KV cache of seq_len + position."""
+    B = shape.global_batch
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

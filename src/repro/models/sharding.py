@@ -1,0 +1,197 @@
+"""Path-based sharding rules: param/cache/batch PartitionSpecs per mesh.
+
+Rules are keyed on parameter names (stable across the model zoo) with
+divisibility guards — an axis is sharded only when the dim divides the mesh
+axis size, so every (arch × mesh) combination lowers cleanly.
+
+Conventions:
+* ``model``          tensor-parallel axis: heads, d_ff, vocab, experts (EP
+                     when E divides), ssm channels.
+* ``fsdp`` =(pod,data) weight sharding for training (ZeRO-3-style; XLA
+                     all-gathers weights per layer inside the scan, which its
+                     latency-hiding scheduler overlaps with compute) and for
+                     serving models too big to replicate per data shard.
+* activations        batch over (pod, data); sequence over model between
+                     blocks when seq-sharding is on (sequence parallelism).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# stacks whose leaves carry leading layer dims
+_STACK1 = ("layers", "dense_layers", "tail", "enc", "dec")
+_STACK2 = ("mamba_groups",)
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(dim: int, mesh: Mesh, axes) -> Optional[Any]:
+    """axes if dim divides their product, else None."""
+    if axes is None:
+        return None
+    size = mesh_axis_size(mesh, axes)
+    return axes if (size > 1 and dim % size == 0) else None
+
+
+def _leaf_spec(path_names: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, mesh: Mesh, fsdp) -> P:
+    """PartitionSpec for one parameter leaf (without stack dims)."""
+    name = path_names[-1]
+    M = "model"
+
+    def ax(dim_idx, axes):
+        return _fit(shape[dim_idx], mesh, axes)
+
+    if name == "wte":                       # [V, d]
+        v = ax(0, M)
+        return P(v, ax(1, fsdp))
+    if name == "head":                      # [d, V]
+        return P(ax(0, fsdp), ax(1, M))
+    if len(shape) == 1:                     # norms / biases / A_log / D
+        return P(None)
+    if name == "wq":                        # [d, H, hd]
+        return P(ax(0, fsdp), ax(1, M), None)
+    if name in ("wk", "wv"):                # [d, Hkv, hd]
+        return P(ax(0, fsdp), ax(1, M), None)
+    if name == "wo":                        # [H, hd, d]
+        return P(ax(0, M), None, ax(2, fsdp))
+    if name in ("wdkv", "wkr"):             # [d, r]
+        return P(ax(0, fsdp), None)
+    if name in ("wuk", "wuv"):              # [r, H, hd]
+        return P(ax(0, fsdp), ax(1, M), None)
+    if name == "gate":                      # [d, E] — small, replicated
+        return P(None, None)
+    if name in ("wg", "wu") and len(shape) == 3:   # experts [E, d, f]
+        e = ax(0, M)
+        if e is not None:
+            return P(e, ax(1, fsdp), None)         # EP
+        return P(None, ax(1, fsdp), ax(2, M))      # TP over f
+    if name == "wd" and len(shape) == 3:           # experts [E, f, d]
+        e = ax(0, M)
+        if e is not None:
+            return P(e, None, ax(2, fsdp))
+        return P(None, ax(1, M), ax(2, fsdp))
+    if name in ("wg", "wu"):                # dense ffn [d, f]
+        return P(ax(0, fsdp), ax(1, M))
+    if name == "wd":                        # dense ffn [f, d]
+        return P(ax(0, M), ax(1, fsdp))
+    if name == "in_proj":                   # [d, dproj]
+        return P(ax(0, fsdp), ax(1, M))
+    if name == "conv_w":                    # [W, ch]
+        return P(None, ax(1, M))
+    if name == "out_proj":                  # [d_in, d]
+        return P(ax(0, M), ax(1, fsdp))
+    return P(*([None] * len(shape)))
+
+
+def _stack_depth(path_names: Tuple[str, ...]) -> int:
+    d = 0
+    for n in path_names:
+        if n in _STACK1:
+            d = 1
+        if n in _STACK2:
+            d = 2
+    return d
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+    return tuple(out)
+
+
+def param_pspecs(cfg: ModelConfig, param_shapes, mesh: Mesh,
+                 mode: str = "train", weight_gather: Optional[bool] = None):
+    """Tree of PartitionSpec matching ``param_shapes`` (a ShapeDtypeStruct
+    tree from eval_shape).
+
+    mode="train": weights FSDP-sharded over (pod, data) + TP over model.
+    mode="serve": TP only, unless the per-data-shard replica would exceed
+    ~10 GB (or weight_gather=True), in which case FSDP sharding stays on and
+    XLA gathers weights per layer on the fly.
+    """
+    if mode == "serve":
+        if weight_gather is None:
+            total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                        for l in jax.tree.leaves(param_shapes))
+            per_model_shard = total / max(mesh_axis_size(mesh, "model"), 1)
+            weight_gather = per_model_shard > 10e9
+        fsdp = data_axes(mesh) if weight_gather else None
+    else:
+        fsdp = fsdp_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        depth = _stack_depth(names)
+        base = _leaf_spec(names, tuple(leaf.shape[depth:]), cfg, mesh, fsdp)
+        return P(*([None] * depth + list(base)))
+
+    return jax.tree_util.tree_map_with_path(spec, param_shapes)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shapes, mesh: Mesh):
+    """KV/SSM cache shardings for serving: batch over (pod,data); heads over
+    model when they divide, else the sequence dim (distributed flash-decode:
+    XLA all-reduces the softmax partials)."""
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        depth = _stack_depth(names)
+        shape = tuple(leaf.shape[depth:])
+        if name == "pos_map":
+            return P(*([None] * leaf.ndim))
+        if name in ("k", "v"):               # [B, S, Hkv, hd]
+            b = _fit(shape[0], mesh, dp)
+            h = _fit(shape[2], mesh, "model")
+            s = None if h is not None else _fit(shape[1], mesh, "model")
+            return P(*([None] * depth), b, s, h, None)
+        if name in ("c_kv", "k_rope"):       # [B, S, r]
+            b = _fit(shape[0], mesh, dp)
+            s = _fit(shape[1], mesh, "model")
+            return P(*([None] * depth), b, s, None)
+        if name == "ssm":                    # [B, H, P, N]
+            b = _fit(shape[0], mesh, dp)
+            h = _fit(shape[1], mesh, "model")
+            return P(*([None] * depth), b, h, None, None)
+        if name == "conv":                   # [B, W-1, ch]
+            b = _fit(shape[0], mesh, dp)
+            c = _fit(shape[2], mesh, "model")
+            return P(*([None] * depth), b, None, c)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(data_axes(mesh), None)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,46 @@
+"""Error-feedback int8 gradient compression for the data-parallel axis.
+
+At 1000+ node scale the DP gradient reduce-scatter dominates the training
+collective term; compressing the per-shard gradient contribution to int8
+(block scales) cuts those bytes 2x vs bf16 / 4x vs f32.  Error feedback
+(residual accumulation) keeps convergence — the quantization error of step t
+is added back into the gradient of step t+1 (Karimireddy et al., 2019).
+
+In pjit-land the all-reduce itself is XLA-inserted; this module provides the
+quantize→dequantize+EF transform applied to the LOCAL gradient contribution
+before the reduction (numerically identical placement to a custom collective
+at the mesh boundary), plus the byte-savings accounting used by the roofline.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizer import dequantize_i8, quantize_i8
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_error_feedback(grads, ef_state
+                                 ) -> Tuple[Any, Any]:
+    """grads -> (compressed-roundtrip grads, new error-feedback residuals)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_i8(gf)
+        deq = dequantize_i8(q, s, gf.shape)
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(one, grads, ef_state)
+    newg = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    newe = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newg, newe
+
+
+def compressed_bytes_fraction() -> float:
+    """int8 + per-256 f32 scale vs f32: (1 + 4/256) / 4."""
+    return (1.0 + 4.0 / 256.0) / 4.0

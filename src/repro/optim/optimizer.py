@@ -1,0 +1,182 @@
+"""Optimizers: AdamW (f32 states) and AdamW8bit (block-quantized int8 states
+with per-block f32 scales — 4x optimizer-memory saving, the knob that lets
+nemotron-4-340b train on a v5e pod), plus warmup+cosine schedule and global
+gradient clipping.  Pure pytree-functional, pjit-friendly (states inherit the
+param shardings; quantized states shard identically since blocks are along
+the last dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (shared by AdamW8bit and gradient compression)
+# ---------------------------------------------------------------------------
+
+QBLOCK = 256
+
+
+def quantize_i8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x -> (int8 values, f32 per-block scales); blocks along flattened dim."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % QBLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    q = jnp.round(flat / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_i8(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = int(np.prod(shape))
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr_fn: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamState, params):
+        grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        step = state.step + 1
+        lr = self.lr_fn(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * gf
+            v2 = self.b2 * v + (1 - self.b2) * gf * gf
+            u = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p - lr * u.astype(jnp.float32)).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamState(step, new_m, new_v), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# AdamW with 8-bit states
+# ---------------------------------------------------------------------------
+
+class Adam8bitState(NamedTuple):
+    step: jax.Array
+    m_q: Any
+    m_s: Any
+    v_q: Any
+    v_s: Any
+
+
+@dataclass(frozen=True)
+class AdamW8bit:
+    lr_fn: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> Adam8bitState:
+        qs = jax.tree.map(lambda p: quantize_i8(jnp.zeros(p.shape, jnp.float32)),
+                          params)
+        mq = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+        ms = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+        return Adam8bitState(jnp.zeros((), jnp.int32), mq, ms,
+                             jax.tree.map(jnp.copy, mq), jax.tree.map(jnp.copy, ms))
+
+    def update(self, grads, state: Adam8bitState, params):
+        grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        step = state.step + 1
+        lr = self.lr_fn(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, mq, ms, vq, vs, p):
+            gf = g.astype(jnp.float32)
+            m = dequantize_i8(mq, ms, p.shape)
+            v = dequantize_i8(vq, vs, p.shape)
+            m2 = self.b1 * m + (1 - self.b1) * gf
+            v2 = self.b2 * v + (1 - self.b2) * gf * gf
+            u = (m2 / b1c) / (jnp.sqrt(jnp.maximum(v2, 0.0) / b2c) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            p2 = (p - lr * u).astype(p.dtype)
+            mq2, ms2 = quantize_i8(m2)
+            vq2, vs2 = quantize_i8(v2)
+            return p2, mq2, ms2, vq2, vs2
+
+        out = jax.tree.map(upd, grads, state.m_q, state.m_s, state.v_q,
+                           state.v_s, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), Adam8bitState(step, pick(1), pick(2), pick(3), pick(4)), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(name: str, lr_fn, weight_decay: float = 0.1,
+                   grad_clip: float = 1.0):
+    if name == "adamw":
+        return AdamW(lr_fn, weight_decay=weight_decay, grad_clip=grad_clip)
+    if name == "adamw8bit":
+        return AdamW8bit(lr_fn, weight_decay=weight_decay, grad_clip=grad_clip)
+    raise ValueError(name)

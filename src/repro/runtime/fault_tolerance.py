@@ -1,0 +1,158 @@
+"""Fault tolerance: heartbeats, straggler detection, restart supervision,
+elastic mesh re-planning.
+
+Scale posture (1000+ nodes): training runs under a supervisor that (a)
+checkpoints every K steps asynchronously, (b) watches per-step heartbeats,
+(c) on failure reforms the mesh from surviving hosts (largest (data, model)
+factorization that keeps the model axis intact) and restores the latest
+checkpoint with the new shardings, (d) flags stragglers from a step-time
+EWMA so the scheduler can evict/replace slow hosts before they become
+failures.  The failure itself is injected in tests via FailureInjector; on a
+real cluster the same hooks attach to the coordinator's liveness service.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# heartbeat
+# ---------------------------------------------------------------------------
+
+class Heartbeat:
+    """Per-host liveness: the training loop beats once per step; a monitor
+    thread (or the supervisor) checks staleness."""
+
+    def __init__(self, host_id: int, timeout_s: float = 60.0):
+        self.host_id = host_id
+        self.timeout_s = timeout_s
+        self._last = time.monotonic()
+        self._lock = threading.Lock()
+
+    def beat(self):
+        with self._lock:
+            self._last = time.monotonic()
+
+    def alive(self) -> bool:
+        with self._lock:
+            return (time.monotonic() - self._last) < self.timeout_s
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StragglerDetector:
+    """EWMA + z-score over per-host step times.  A host whose step time
+    exceeds mean + threshold·std for ``patience`` consecutive steps is
+    flagged for replacement (mitigation: the supervisor excludes it at the
+    next elastic re-plan instead of letting it gate every collective)."""
+
+    alpha: float = 0.2
+    threshold: float = 3.0
+    patience: int = 3
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    _consecutive: Dict[int, int] = field(default_factory=dict)
+
+    def observe(self, host_id: int, step_time: float) -> bool:
+        """Returns True if host is currently flagged as a straggler."""
+        if self._n < 5:  # warmup
+            self._mean = (self._mean * self._n + step_time) / (self._n + 1)
+            self._n += 1
+            return False
+        z = (step_time - self._mean) / max(np.sqrt(self._var), 1e-6)
+        if z > self.threshold:
+            # outlier: flag, and keep it OUT of the fleet statistics so a
+            # persistent straggler cannot normalize itself into the baseline
+            self._consecutive[host_id] = self._consecutive.get(host_id, 0) + 1
+        else:
+            self._consecutive[host_id] = 0
+            self._mean = (1 - self.alpha) * self._mean + self.alpha * step_time
+            self._var = (1 - self.alpha) * self._var + \
+                self.alpha * (step_time - self._mean) ** 2
+            self._n += 1
+        return self._consecutive.get(host_id, 0) >= self.patience
+
+
+# ---------------------------------------------------------------------------
+# elastic mesh planning
+# ---------------------------------------------------------------------------
+
+def plan_mesh(num_devices: int, model_parallel: int,
+              prefer_pods: Optional[int] = None) -> Dict[str, int]:
+    """Largest usable (pod, data, model) factorization from surviving
+    devices.  The model axis is preserved (weights reshard badly across TP
+    degree); data absorbs the loss — standard elastic-DP policy."""
+    assert num_devices >= model_parallel, "cannot keep TP degree"
+    data = num_devices // model_parallel
+    # use the largest power-of-two data degree for clean microbatching
+    d2 = 1
+    while d2 * 2 <= data:
+        d2 *= 2
+    out = {"data": d2, "model": model_parallel}
+    if prefer_pods and prefer_pods > 1 and d2 % prefer_pods == 0:
+        out = {"pod": prefer_pods, "data": d2 // prefer_pods,
+               "model": model_parallel}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# failure injection + supervisor
+# ---------------------------------------------------------------------------
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples: fail at given
+    steps (simulating a host loss) with a device-count after each."""
+
+    def __init__(self, schedule: Dict[int, int]):
+        self.schedule = dict(schedule)     # step -> surviving device count
+
+    def check(self, step: int) -> Optional[int]:
+        return self.schedule.pop(step, None)
+
+
+@dataclass
+class SupervisorReport:
+    restarts: int
+    completed_steps: int
+    final_devices: int
+    straggler_flags: List[int]
+    mesh_history: List[Dict[str, int]]
+
+
+def run_supervised(train_loop: Callable[[int, Dict[str, int], int], Tuple[int, bool]],
+                   total_steps: int, initial_devices: int,
+                   model_parallel: int,
+                   injector: Optional[FailureInjector] = None,
+                   max_restarts: int = 10) -> SupervisorReport:
+    """Generic restart supervisor.
+
+    ``train_loop(start_step, mesh_plan, devices)`` runs until completion or a
+    (simulated) failure, returning (last_checkpointed_step, finished).  The
+    supervisor re-plans the mesh and restarts from the checkpoint.
+    """
+    devices = initial_devices
+    restarts = 0
+    step = 0
+    mesh_history = [plan_mesh(devices, model_parallel)]
+    while step < total_steps and restarts <= max_restarts:
+        plan = plan_mesh(devices, model_parallel)
+        if plan != mesh_history[-1]:
+            mesh_history.append(plan)
+        step, finished = train_loop(step, plan, devices)
+        if finished:
+            return SupervisorReport(restarts, step, devices, [], mesh_history)
+        restarts += 1
+        if injector:
+            surv = injector.check(step)
+            if surv is not None:
+                devices = surv
+    return SupervisorReport(restarts, step, devices, [], mesh_history)

@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py fabricates 512 devices."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.registry import get_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def reduced_f32(arch: str, **over):
+    cfg = get_config(arch).reduced(dtype="float32", **over)
+    return cfg
+
+
+def make_draft_for(cfg):
+    """Dense (or shallow) draft config for SD tests."""
+    if cfg.is_moe:
+        return dataclasses.replace(cfg, num_experts=0, num_experts_per_tok=0,
+                                   num_shared_experts=0, first_dense_layers=0,
+                                   name=cfg.name + "-draft")
+    return dataclasses.replace(cfg, num_layers=max(2, cfg.num_layers // 2),
+                               name=cfg.name + "-draft")

@@ -1,0 +1,156 @@
+"""Per-kernel allclose validation vs the pure-jnp oracles (interpret mode),
+sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.ssd_scan import ssd_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.dtype(dtype).type] if False else \
+        (2e-2 if jnp.dtype(dtype) == jnp.bfloat16 else 2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,D,bq,bk", [
+    (1, 16, 16, 4, 4, 16, 8, 8),      # MHA square
+    (2, 16, 32, 4, 2, 16, 8, 8),      # GQA, kv longer (decode-block case)
+    (1, 32, 32, 8, 1, 32, 16, 16),    # MQA
+    (1, 8, 8, 2, 2, 64, 8, 8),        # single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Skv, H, Hkv, D, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("window", [4, 7, 16])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 16, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 16, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 16, 2, 16), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=8, block_k=8, interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D,bk", [
+    (2, 32, 4, 2, 16, 8),
+    (1, 64, 8, 8, 32, 16),
+    (3, 16, 2, 1, 64, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, S, H, Hkv, D, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = decode_attention(q, k, v, lengths, block_k=bk, interpret=True)
+    ref = R.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("E,C,d,f,bc,bf,bd", [
+    (4, 16, 32, 64, 8, 32, 16),
+    (2, 8, 16, 32, 8, 16, 16),
+    (8, 32, 64, 32, 16, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gemm_sweep(E, C, d, f, bc, bf, bd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    xg = jax.random.normal(ks[0], (E, C, d), dtype)
+    wg = (jax.random.normal(ks[1], (E, d, f), dtype) * 0.1).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, f), dtype) * 0.1).astype(dtype)
+    wd = (jax.random.normal(ks[3], (E, f, d), dtype) * 0.1).astype(dtype)
+    valid = jax.random.bernoulli(ks[4], 0.7, (E, C))
+    out = moe_gemm(xg, wg, wu, wd, valid, block_c=bc, block_f=bf, block_d=bd,
+                   interpret=True)
+    ref = R.moe_gemm_ref(xg, wg, wu, wd, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=2e-2)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 16, 2, 8, 4, 8),
+    (2, 32, 3, 8, 4, 8),
+    (1, 64, 1, 16, 8, 16),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    out = ssd_scan(x, dt, A, B, C, chunk, interpret=True)
+    ref, _ = R.ssd_ref(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_ref_matches_sequential():
+    """The chunked SSD oracle itself vs a naive sequential recurrence."""
+    b, s, h, p, n, chunk = 1, 12, 2, 4, 3, 4
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    y_chunk, final = R.ssd_ref(x, dt, A, B, C, chunk)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y_t, state = R.ssd_decode_ref(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(state),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ops_wrappers_dispatch():
+    """kernels/ops.py: jit wrappers run (ref path on CPU) and match oracles."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 16, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 16, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 16, 2, 16), jnp.float32)
+    auto = ops.attention(q, k, v)
+    ref = R.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(ref), atol=1e-5)
+    interp = ops.attention(q, k, v, impl="interpret")
+    np.testing.assert_allclose(np.asarray(interp), np.asarray(ref), atol=1e-4,
+                               rtol=1e-3)
+    x = jax.random.normal(ks[0], (1, 32, 2, 8))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 32, 2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)) * 0.3)
+    B = jax.random.normal(ks[0], (1, 32, 4))
+    C = jax.random.normal(ks[1], (1, 32, 4))
+    y1 = ops.ssd(x, dt, A, B, C, 8)
+    y2 = ops.ssd(x, dt, A, B, C, 8, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-3)

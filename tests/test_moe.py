@@ -1,0 +1,98 @@
+"""MoE routing correctness + dispatch property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.models.moe import (_dispatch_indices, gate_topk, init_moe,
+                              moe_global, moe_grouped, moe_ref)
+
+
+def _cfg(arch="mixtral-8x7b", **over):
+    cfg = get_config(arch).reduced(dtype="float32")
+    return dataclasses.replace(cfg, **over)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-v2-lite-16b",
+                                  "phi-3.5-moe"])
+def test_routing_paths_match_oracle(arch):
+    cfg = _cfg(arch, capacity_factor=8.0)
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    ref = moe_ref(p, x, cfg)
+    yg, _ = moe_grouped(p, x, cfg)
+    ygl, _ = moe_global(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ygl), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_global_path_is_dropless_under_skew():
+    """Even with every token picking the same expert, moe_global drops none."""
+    cfg = _cfg(capacity_factor=0.5)
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    # gate weights forced so expert 0/1 always win
+    gate = np.zeros((cfg.d_model, cfg.num_experts), np.float32)
+    gate[:, 0] = 5.0
+    gate[:, 1] = 4.0
+    p = dict(p, gate=jnp.asarray(gate))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    ref = moe_ref(p, x, cfg)
+    y, _ = moe_global(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 16), st.integers(1, 4),
+       st.integers(2, 32))
+def test_dispatch_indices_properties(seed, E, k, T):
+    """Dispatch invariants: every (token, choice) either lands in a unique
+    (expert, slot) or is dropped; slots stay within capacity; valid mask
+    matches; no two choices share a slot."""
+    k = min(k, E)
+    rng = np.random.default_rng(seed)
+    ids_np = np.stack([rng.choice(E, size=k, replace=False) for _ in range(T)])
+    C = max(1, int(np.ceil(T * k / E)))
+    ids = jnp.asarray(ids_np, jnp.int32)
+    idx, valid, slot = jax.tree.map(np.asarray, _dispatch_indices(ids, E, C))
+    # every valid (e, c) slot holds a token that actually chose e
+    for e in range(E):
+        for c in range(C):
+            if valid[e, c]:
+                assert e in ids_np[idx[e, c]]
+    # slot mapping consistency: choice (t, j) with slot < C maps back to t
+    for t in range(T):
+        for j in range(k):
+            s = slot[t, j]
+            if s < C:
+                assert valid[ids_np[t, j], s]
+                assert idx[ids_np[t, j], s] == t
+    # capacity respected: counts per expert <= C, no duplicate tokens per slot
+    for e in range(E):
+        used = [idx[e, c] for c in range(C) if valid[e, c]]
+        assert len(used) == len(set(used))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_gate_topk_normalized(seed):
+    cfg = _cfg()
+    gate = jax.random.normal(jax.random.PRNGKey(seed % 2 ** 31),
+                             (cfg.d_model, cfg.num_experts))
+    x = jax.random.normal(jax.random.PRNGKey((seed + 1) % 2 ** 31),
+                          (4, cfg.d_model))
+    w, ids, probs, aux = gate_topk(gate, x, cfg.num_experts_per_tok)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, atol=1e-5)
+    assert np.asarray(probs).min() >= 0
+    assert float(aux) >= 1.0 - 1e-3   # switch aux loss lower bound is 1
+    # ids within range and unique per token
+    ids_np = np.asarray(ids)
+    assert ids_np.min() >= 0 and ids_np.max() < cfg.num_experts
+    for row in ids_np:
+        assert len(set(row.tolist())) == len(row)

@@ -1,0 +1,105 @@
+"""Speculative decoding: LOSSLESSNESS (the core property — SD output is
+bit-identical to target-only greedy decoding) + acceptance behaviour."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_draft_for
+from repro.configs.registry import get_config
+from repro.core.sd import greedy_generate, make_sd_step, sd_generate
+from repro.models.registry import build_model
+
+
+def _setup(arch, seed=0, draft_seed=1):
+    cfg = get_config(arch).reduced(dtype="float32")
+    dcfg = make_draft_for(cfg)
+    target = build_model(cfg)
+    draft = build_model(dcfg)
+    tparams = target.init(jax.random.PRNGKey(seed))
+    dparams = draft.init(jax.random.PRNGKey(draft_seed))
+    return cfg, dcfg, target, draft, tparams, dparams
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-v2-lite-16b",
+                                  "llama3.2-3b"])
+@pytest.mark.parametrize("draft_len", [1, 3, 5])
+def test_sd_lossless(arch, draft_len):
+    cfg, dcfg, target, draft, tparams, dparams = _setup(arch)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size)
+    ref = greedy_generate(target, tparams, prompt, 20, 64)
+    out, stats = sd_generate(draft, target, dparams, tparams, prompt, 20,
+                             draft_len, 64)
+    assert out.tolist() == ref.tolist(), stats
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_sd_lossless_property(seed, draft_len):
+    """Losslessness holds for ANY draft model (even adversarial/random)."""
+    cfg, dcfg, target, draft, tparams, dparams = _setup(
+        "mixtral-8x7b", seed=seed % 7, draft_seed=seed)
+    prompt = jax.random.randint(jax.random.PRNGKey(seed), (1, 5), 0,
+                                cfg.vocab_size)
+    ref = greedy_generate(target, tparams, prompt, 12, 48)
+    out, _ = sd_generate(draft, target, dparams, tparams, prompt, 12,
+                         draft_len, 48)
+    assert out.tolist() == ref.tolist()
+
+
+def test_sd_perfect_draft_accepts_everything():
+    """Draft == target -> every draft token is accepted (acceptance rate 1),
+    and SD emits draft_len+1 tokens per iteration."""
+    cfg = get_config("llama3.2-3b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, cfg.vocab_size)
+    out, stats = sd_generate(model, model, params, params, prompt, 16, 4, 64)
+    ref = greedy_generate(model, params, prompt, 16, 64)
+    assert out.tolist() == ref.tolist()
+    assert stats["acceptance_rate"] > 0.99
+    assert stats["tokens_per_iteration"] >= 4.9
+
+
+def test_sd_step_emits_within_bounds():
+    cfg, dcfg, target, draft, tparams, dparams = _setup("llama3.2-3b")
+    N = 4
+    step = jax.jit(make_sd_step(draft, target, N))
+    _, tcache = target.prefill(tparams, jnp.zeros((1, 4), jnp.int32), 32)
+    _, dcache = draft.prefill(dparams, jnp.zeros((1, 4), jnp.int32), 32)
+    cur = jnp.array([[1]], jnp.int32)
+    res = step(dparams, tparams, dcache, tcache, cur, jnp.int32(4))
+    n = int(res.n_emitted)
+    assert 1 <= n <= N + 1
+    assert int(res.n_accepted) == n - 1
+    toks = np.asarray(res.tokens)
+    assert np.all(toks[:n] >= 0)
+    assert np.all(toks[n:] == -1)
+
+
+def test_adaptive_draft_length_lossless_and_adapts():
+    """Beyond-paper controller: lossless for any schedule; grows N with a
+    perfect draft, shrinks with a useless one."""
+    from repro.core.sd import sd_generate_adaptive
+    cfg = get_config("llama3.2-3b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0,
+                                cfg.vocab_size)
+    ref = greedy_generate(model, params, prompt, 20, 96)
+    # perfect draft (same model): N should grow toward max
+    out, stats = sd_generate_adaptive(model, model, params, params, prompt,
+                                      20, 96, min_len=1, max_len=6)
+    assert out.tolist() == ref.tolist()
+    assert stats["final_draft_len"] >= 4
+    # useless draft (random weights): N stays at the floor, still lossless
+    dcfg = make_draft_for(cfg)
+    draft = build_model(dcfg)
+    dparams = draft.init(jax.random.PRNGKey(9))
+    out2, stats2 = sd_generate_adaptive(draft, model, dparams, params, prompt,
+                                        20, 96, min_len=1, max_len=6)
+    assert out2.tolist() == ref.tolist()
+    assert stats2["mean_draft_len"] <= 2.5
