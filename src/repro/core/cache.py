@@ -3,12 +3,27 @@
 The cache is a fixed pool of ``slots`` expert-weight buffers resident in
 device memory (HBM), plus host-side bookkeeping:
 
-* ``table``   ExpertKey -> slot (the page table)
-* ``lru``     access order (OrderedDict; head = eviction candidate)
+* ``table``       ExpertKey -> slot (the page table)
+* ``lru``         access order (OrderedDict; head = eviction candidate)
+
+and — when constructed with ``table_shape=(L, E)`` — a **device-resident
+mirror of the page table**, ``table_dev [L, E] -> slot | -1``, maintained
+incrementally (one fused int32 scatter per insert covering both the evicted
+keys and the fresh ones).  The offload runtime's verification hot path reads
+it with a plain device gather, so routing-to-slot translation never touches
+the host (see runtime._verify_block).
 
 Slot buffers are updated with donated jitted scatters so the pool is updated
 in place — no reallocation, no copy-back to host on eviction (§7: classic
 space-time tradeoff, experts always stay host-resident).
+
+Concurrency contract: the prefetch worker and the compute loop both mutate
+the cache.  All bookkeeping is under ``self.lock``; because inserts *donate*
+``bufs``/``table_dev`` (invalidating the old jax handles), any reader that
+dispatches compute against them must snapshot them under the same lock
+(``snapshot()``) so a concurrent insert can't delete the handle between read
+and dispatch.  In-flight device computation is safe either way — XLA
+sequences buffer donation after pending consumers.
 """
 from __future__ import annotations
 
@@ -28,6 +43,11 @@ def _batched_insert(bufs, stacked, slots):
     return {name: bufs[name].at[slots].set(stacked[name]) for name in bufs}
 
 
+def _table_scatter(table, ls, es, vals):
+    """table: [L, E] int32; point-scatter of slot ids (or -1 tombstones)."""
+    return table.at[ls, es].set(vals)
+
+
 class ExpertCache:
     """LRU cache of expert weights in device memory.
 
@@ -35,7 +55,8 @@ class ExpertCache:
     """
 
     def __init__(self, num_slots: int, buffer_shapes: Dict[str, tuple],
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16,
+                 table_shape: Optional[Tuple[int, int]] = None):
         self.num_slots = num_slots
         self.dtype = dtype
         self.bufs = {name: jnp.zeros((num_slots,) + tuple(shape), dtype)
@@ -45,6 +66,12 @@ class ExpertCache:
         self.free: List[int] = list(range(num_slots))
         self.lock = threading.RLock()
         self._insert = jax.jit(_batched_insert, donate_argnums=(0,))
+        # device-resident page-table mirror [L, E] -> slot | -1
+        self.table_shape = table_shape
+        self.table_dev: Optional[jax.Array] = (
+            jnp.full(table_shape, -1, jnp.int32)
+            if table_shape is not None else None)
+        self._scatter_table = jax.jit(_table_scatter, donate_argnums=(0,))
         # stats
         self.hits = 0
         self.misses = 0
@@ -77,55 +104,114 @@ class ExpertCache:
         with self.lock:
             return jnp.array([self.table[k] for k in keys], jnp.int32)
 
+    def snapshot(self) -> Tuple[Dict[str, jax.Array], Optional[jax.Array]]:
+        """(bufs, table_dev) captured atomically w.r.t. donating inserts.
+
+        Dispatch device compute against the snapshot while still holding
+        ``self.lock`` (dispatch is enqueue-only, so the critical section is
+        short); once dispatched, a concurrent donation is sequenced by the
+        runtime after the in-flight consumers.
+        """
+        with self.lock:
+            return self.bufs, self.table_dev
+
     # ----------------------------------------------------------------- writes
-    def _allocate(self, n: int) -> List[int]:
-        """Reserve n slots, evicting LRU entries as needed.  Lock held."""
-        if n > self.num_slots:
-            raise ValueError(
-                f"batch of {n} experts exceeds cache capacity "
-                f"{self.num_slots}; load in waves (see runtime._verify_block)")
-        slots = []
+    def _allocate(self, n: int, protect: frozenset = frozenset()
+                  ) -> Tuple[List[int], List[ExpertKey]]:
+        """Reserve n slots, evicting LRU entries as needed.  Lock held.
+        Keys in ``protect`` (the insert batch's already-present members) are
+        never chosen as victims — evicting them would invalidate the slots
+        this very insert is about to return.  Returns (slots, evicted)."""
+        slots: List[int] = []
+        evicted: List[ExpertKey] = []
         while len(slots) < n:
             if self.free:
                 slots.append(self.free.pop())
                 continue
-            victim, used = self.lru.popitem(last=False)
+            victim = next((k for k in self.lru if k not in protect), None)
+            if victim is None:
+                raise ValueError(
+                    f"batch needs {n} slots but cache capacity is "
+                    f"{self.num_slots}; load in waves "
+                    f"(see runtime._verify_block)")
+            used = self.lru.pop(victim)
             slots.append(self.table.pop(victim))
+            evicted.append(victim)
             self.evictions += 1
             if not used:
                 self.prefetch_evicted += 1
-        return slots
+        return slots, evicted
 
     def insert(self, keys: Sequence[ExpertKey],
                host_arrays: Dict[str, np.ndarray],
                mark_used: bool = False) -> List[int]:
         """Batched I/O (paper §3.3): one device transfer + one donated scatter
         for the whole group of experts.  host_arrays: name -> [n, ...].
+
+        Asynchronous by construction: the H2D transfer and both scatters are
+        dispatched, not awaited — the caller's next consumer of ``bufs`` /
+        ``table_dev`` is sequenced after them by the jax runtime, so the
+        prefetch worker returns immediately and its H2D overlaps whatever the
+        host does next (the next ``HostExpertStore.fetch`` in particular —
+        that is the double-buffering contract, see offload.py).  Use
+        ``wait()`` for a hard barrier.
         """
         if not keys:
             return []
         with self.lock:
-            fresh = [k for k in keys if k not in self.table]
+            if len(set(keys)) > self.num_slots:
+                raise ValueError(
+                    f"batch of {len(set(keys))} experts exceeds cache "
+                    f"capacity {self.num_slots}; load in waves "
+                    f"(see runtime._verify_block)")
+            # dedupe (first occurrence wins) — a duplicated key must not
+            # allocate two slots, that would leak one permanently
+            seen = set()
+            fresh: List[ExpertKey] = []
+            sel: List[int] = []
+            for i, k in enumerate(keys):
+                if k not in self.table and k not in seen:
+                    fresh.append(k)
+                    sel.append(i)
+                    seen.add(k)
             if fresh:
-                sel = [i for i, k in enumerate(keys) if k not in self.table]
-                slots = self._allocate(len(fresh))
-                stacked = {name: jax.device_put(arr[sel].astype(self.dtype))
-                           for name, arr in host_arrays.items()}
+                slots, evicted = self._allocate(
+                    len(fresh), protect=frozenset(keys))
+                if len(sel) == len(host_arrays[next(iter(host_arrays))]):
+                    picked = {n: arr for n, arr in host_arrays.items()}
+                else:
+                    picked = {n: arr[sel] for n, arr in host_arrays.items()}
+                stacked = {n: jax.device_put(np.asarray(arr, self.dtype))
+                           for n, arr in picked.items()}
                 slot_arr = jnp.array(slots, jnp.int32)
                 self.bufs = self._insert(self.bufs, stacked, slot_arr)
                 for k, s in zip(fresh, slots):
                     self.table[k] = s
                     self.lru[k] = 1 if mark_used else 0
                     self.lru.move_to_end(k)
+                if self.table_dev is not None:
+                    ls = np.fromiter((k[0] for k in evicted + fresh), np.int32)
+                    es = np.fromiter((k[1] for k in evicted + fresh), np.int32)
+                    vals = np.asarray([-1] * len(evicted) + slots, np.int32)
+                    self.table_dev = self._scatter_table(
+                        self.table_dev, ls, es, vals)
             # refresh LRU position of already-present keys
             for k in keys:
                 if k in self.lru:
                     self.lru.move_to_end(k)
             return [self.table[k] for k in keys]
 
+    # back-compat alias: insert() is already non-blocking; the name documents
+    # intent at prefetcher call sites.
+    insert_async = insert
+
     def wait(self):
         """Barrier: ensure all in-flight buffer updates are materialized."""
-        jax.block_until_ready(jax.tree.leaves(self.bufs))
+        with self.lock:
+            leaves = jax.tree.leaves(self.bufs)
+            if self.table_dev is not None:
+                leaves = leaves + [self.table_dev]
+        jax.block_until_ready(leaves)
 
     # ------------------------------------------------------------------ stats
     def hit_rate(self) -> float:
@@ -137,7 +223,8 @@ class ExpertCache:
             self.hits = self.misses = self.evictions = self.prefetch_evicted = 0
 
     def check_invariants(self) -> bool:
-        """Property-test hook: page table and LRU agree, no slot aliasing."""
+        """Property-test hook: page table and LRU agree, no slot aliasing,
+        and the device table mirror matches the host page table exactly."""
         with self.lock:
             if set(self.table.keys()) != set(self.lru.keys()):
                 return False
@@ -150,4 +237,11 @@ class ExpertCache:
                 return False
             if len(slots) + len(self.free) != self.num_slots:
                 return False
+            if self.table_dev is not None:
+                tdev = np.asarray(self.table_dev)
+                want = np.full(self.table_shape, -1, np.int32)
+                for (l, e), s in self.table.items():
+                    want[l, e] = s
+                if not np.array_equal(tdev, want):
+                    return False
             return True

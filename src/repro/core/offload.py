@@ -1,12 +1,22 @@
 """Host-resident expert store (the offloaded side of the cache).
 
 All expert weights stay in host memory for the lifetime of the engine —
-eviction never copies back (paper §7).  ``fetch`` performs the batched read:
-one contiguous ``np.stack`` per weight tensor, which the ExpertCache turns
-into a single device transfer.
+eviction never copies back (paper §7).  ``fetch`` performs the batched read
+into **preallocated, contiguous staging buffers** (the pinned-memory analogue
+on this backend): one ``np.take(..., out=...)`` per weight tensor, no
+per-call allocation, no fancy-indexed temporary.  Per *thread*, two staging
+buffers alternate (double buffering) so the H2D transfer dispatched by
+``ExpertCache.insert`` on batch *i* overlaps the host gather of batch *i+1*
+— the prefetch worker's pipeline never stalls on its own staging memory.
+
+The staging ring is **thread-local**: the prefetch worker and the compute
+loop both call ``fetch`` concurrently (worker prefetch vs. the slow path's
+miss waves), and a shared ring would let one thread's gather overwrite the
+other's staged weights before the device copy happens.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Sequence, Tuple
 
 import jax
@@ -15,19 +25,42 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.cache import ExpertKey
 
+_NUM_STAGING = 2          # double buffer: gather batch i+1 while i transfers
+
 
 class HostExpertStore:
     """Extracts per-(layer, expert) weights from a target model's params and
     keeps them as host numpy arrays."""
 
-    def __init__(self, cfg: ModelConfig, params):
+    def __init__(self, cfg: ModelConfig, params, staging_batch: int = 16):
         assert cfg.is_moe, "HostExpertStore requires an MoE config"
         self.cfg = cfg
         moe = params["layers"]["moe"]        # stacked [L_moe, E, ...]
         self.names = [n for n in ("wg", "wu", "wd") if n in moe]
-        self._store = {n: np.asarray(moe[n]) for n in self.names}
+        self._store = {n: np.ascontiguousarray(moe[n]) for n in self.names}
         self.num_layers = self._store[self.names[0]].shape[0]
         self.num_experts = self._store[self.names[0]].shape[1]
+        # flat [L*E, ...] views for single-gather batched reads
+        self._flat = {n: self._store[n].reshape(
+            (self.num_layers * self.num_experts,) + self._store[n].shape[2:])
+            for n in self.names}
+        # preallocated staging rings, one per calling thread (grown on
+        # demand, never shrunk)
+        self._stage_batch = max(1, staging_batch)
+        self._tls = threading.local()
+
+    def _alloc_stage(self, cap: int) -> Dict[str, np.ndarray]:
+        return {n: np.empty((cap,) + self._store[n].shape[2:],
+                            self._store[n].dtype) for n in self.names}
+
+    def _thread_ring(self, min_cap: int):
+        tls = self._tls
+        if getattr(tls, "stages", None) is None or tls.cap < min_cap:
+            tls.cap = max(self._stage_batch, min_cap)
+            tls.stages = [self._alloc_stage(tls.cap)
+                          for _ in range(_NUM_STAGING)]
+            tls.i = 0
+        return tls
 
     def buffer_shapes(self) -> Dict[str, tuple]:
         return {n: self._store[n].shape[2:] for n in self.names}
@@ -36,16 +69,38 @@ class HostExpertStore:
         return int(sum(self._store[n][0, 0].nbytes for n in self.names))
 
     def fetch(self, keys: Sequence[ExpertKey]) -> Dict[str, np.ndarray]:
-        """Batched host read: name -> [len(keys), ...]."""
-        ls = [k[0] for k in keys]
-        es = [k[1] for k in keys]
-        return {n: self._store[n][ls, es] for n in self.names}
+        """Batched host read: name -> [len(keys), ...] staged contiguously.
+
+        The returned arrays are views into the calling thread's current
+        staging buffer; they stay valid until that thread's next-but-one
+        ``fetch`` (double buffering) — long enough for
+        ``ExpertCache.insert`` to dispatch the H2D transfer.
+        """
+        n_keys = len(keys)
+        tls = self._thread_ring(n_keys)
+        stage = tls.stages[tls.i]
+        tls.i = (tls.i + 1) % _NUM_STAGING
+        idx = np.fromiter((l * self.num_experts + e for (l, e) in keys),
+                          np.int64, count=n_keys)
+        out = {}
+        for n in self.names:
+            np.take(self._flat[n], idx, axis=0, out=stage[n][:n_keys])
+            out[n] = stage[n][:n_keys]
+        return out
 
     def strip_experts(self, params):
         """Return params with expert tensors removed (host-only now) — the
-        resident footprint the offload engine actually keeps on device."""
+        resident footprint the offload engine actually keeps on device.
+
+        Copies every dict on the path to ``params["layers"]["moe"]``
+        explicitly so the caller's nested params are never mutated (a
+        ``jax.tree.map`` identity copy is an implementation detail of the
+        pytree registry, not a documented isolation guarantee).
+        """
         import jax.numpy as jnp
-        out = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+        out = dict(params)
+        out["layers"] = dict(params["layers"])
+        out["layers"]["moe"] = dict(params["layers"]["moe"])
         for n in self.names:
             out["layers"]["moe"][n] = jnp.zeros((0,), jnp.bfloat16)
         return out

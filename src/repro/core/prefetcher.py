@@ -6,6 +6,14 @@ event (the cuda.Event analogue — here a threading.Event resolved by the
 producer) so the worker never consumes half-prepared task descriptors, and a
 "done" event the compute loop can wait on for just-in-time arrival.
 
+In-flight accounting is a counter + condition variable: ``submit`` increments
+before enqueueing, the worker decrements after the task is fully executed
+(including the cache insert dispatch), and ``drain()`` waits on the condition
+— no polling, and no window where a popped-but-still-executing task escapes
+the barrier.  The store's double-buffered staging plus the cache's
+non-blocking insert mean the worker's H2D transfer for task *i* overlaps the
+host gather for task *i+1*.
+
 Two executor flavours mirror the paper's ablation (Figure 8/12):
 
 * ``vanilla``  layer-triggered, synchronous: the producer thread itself loads
@@ -44,6 +52,9 @@ class Prefetcher:
         self.queue: "queue.Queue[Optional[PrefetchTask]]" = queue.Queue()
         self.loaded_count = 0
         self.io_events: List[int] = []     # batch sizes, for kernel-launch accounting
+        self._cv = threading.Condition()
+        self._inflight = 0                 # submitted but not yet executed
+        self.errors: List[BaseException] = []   # surfaced worker failures
         self._thread: Optional[threading.Thread] = None
         if mode == "worker":
             self._thread = threading.Thread(target=self._run, daemon=True)
@@ -59,7 +70,10 @@ class Prefetcher:
         task.ready.set()                   # descriptor fully prepared
         if self.mode == "vanilla":
             self._execute(task)            # synchronous: blocks the producer
+            task.done.set()
         else:
+            with self._cv:
+                self._inflight += 1
             self.queue.put(task)
         return task
 
@@ -68,36 +82,45 @@ class Prefetcher:
         while True:
             task = self.queue.get()
             if task is None:
+                self.queue.task_done()
                 return
-            task.ready.wait()              # Algorithm 2 line 5
-            if not task.cancelled:
-                self._execute(task)
-            task.done.set()
+            try:
+                task.ready.wait()          # Algorithm 2 line 5
+                if not task.cancelled:
+                    self._execute(task)
+            except BaseException as e:     # keep the worker alive: a failed
+                self.errors.append(e)      # task must not strand the queue
+            finally:
+                task.done.set()
+                self.queue.task_done()
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
 
     def _execute(self, task: PrefetchTask):
         keys = [k for k in task.keys if not self.cache.contains(k)]
         if not keys:
-            task.done.set()
             return
         if self.batched:
             arrays = self.store.fetch(keys)
-            self.cache.insert(keys, arrays)          # one transfer + scatter
+            self.cache.insert_async(keys, arrays)    # one transfer + scatter
             self.io_events.append(len(keys))
         else:
             for k in keys:                            # per-expert sync I/O
                 arrays = self.store.fetch([k])
-                self.cache.insert([k], arrays)
+                self.cache.insert_async([k], arrays)
                 self.io_events.append(1)
         self.loaded_count += len(keys)
-        task.done.set()
 
     # ------------------------------------------------------------------ admin
     def drain(self):
-        """Block until the queue is empty and transfers have landed."""
-        self.queue.join() if False else None
-        while not self.queue.empty():
-            import time
-            time.sleep(0.001)
+        """Block until every submitted task has fully executed and the device
+        transfers have landed.  Condition-variable wait — no busy-wait, and a
+        task popped from the queue but still mid-``_execute`` is covered by
+        the in-flight counter."""
+        if self.mode == "worker":
+            with self._cv:
+                self._cv.wait_for(lambda: self._inflight == 0)
         self.cache.wait()
 
     def stop(self):

@@ -13,10 +13,47 @@ is running on:
     dispatched (asynchronously) while misses stream in, then the miss part is
     computed — compute/IO overlap without waiting on full availability.
 
+Verification hot path (device-resident)
+---------------------------------------
+Verification latency is bounded by how well expert loading overlaps compute,
+so the verify step must not re-enter the host per layer.  Two paths share
+the slot-indexed grouped kernel ``kernels/cache_moe.py``:
+
+* **fast path** — a single jitted ``lax.scan`` over all MoE layers.
+  Routing (``gate_topk``), slot translation (a gather from the cache's
+  device-side page table ``table_dev [L, E] -> slot | -1``), the hit mask,
+  the cached-expert FFN, and the per-layer history/hit accounting all stay
+  on device.  The block also computes an ``all_hit`` flag; the **only** host
+  sync in the block is reading that one scalar.  If every routed expert was
+  cache-resident (the common case once prefetching is warm) the block's
+  logits and KV-cache update are committed as-is — together with the
+  accept/reject readback in ``generate`` that is **2 host syncs per verify
+  block**.  If some expert was missing, the speculative fast block is
+  discarded (its KV cache is a pure-functional copy, so nothing to undo) and
+  the slow path re-runs the block with on-demand loading.
+
+* **slow path (miss resolution)** — the layer-by-layer loop: routing ids are
+  read back once per layer (the miss-resolution sync), missing experts are
+  fetched in cache-capacity-bounded waves while the already-dispatched
+  cached-first compute proceeds underneath, and each wave's share of the
+  block is added via the same slot-indexed kernel with the wave's slots
+  unmasked.  A block that resolves with zero misses re-arms the fast path
+  (adaptive: cold caches never pay the speculative double-compute, warm
+  caches never pay per-layer syncs).
+
+Expert weights are *never* sliced out of the resident target params on the
+hot path — both paths read expert weights exclusively from the ExpertCache
+slot buffers, which is what makes the offload story honest.
+
 Baseline policies (for the paper's comparisons) plug into the same loop:
   on-demand (Mixtral-Offloading), moe-infinity (historical top-k,
   request-level, depth-unbounded), adapmoe (same-model next-layer gating,
-  synchronous prefetch).
+  synchronous prefetch — always the slow path, per its design).
+
+Host-sync accounting: every blocking device->host readback in the engine
+goes through ``_readback`` (a test hook — tests/test_offload_hotpath.py spies
+on it to enforce the ≤2-syncs-per-block contract) and is counted in
+``stats["host_syncs"]``.
 """
 from __future__ import annotations
 
@@ -34,6 +71,7 @@ from repro.core.cutoff import CutoffDecision, HardwareProfile, solve_cutoff
 from repro.core.offload import HostExpertStore
 from repro.core.predictor import ExpertPredictor
 from repro.core.prefetcher import Prefetcher
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.moe import gate_topk, ffn_forward
 from repro.models.transformer import DecoderLM
@@ -59,8 +97,9 @@ class OffloadEngine:
         self.draft = DecoderLM(draft_cfg)
         self.tparams, self.dparams = tparams, dparams
         self.store = HostExpertStore(cfg, tparams)
-        self.cache = ExpertCache(cache_slots, self.store.buffer_shapes(),
-                                 jnp.dtype(cfg.dtype))
+        self.cache = ExpertCache(
+            cache_slots, self.store.buffer_shapes(), jnp.dtype(cfg.dtype),
+            table_shape=(self.store.num_layers, cfg.num_experts))
         mode = prefetch_mode if policy in ("spmoe", "moe-infinity") else (
             "vanilla" if policy == "adapmoe" else "off")
         self.prefetcher = Prefetcher(self.store, self.cache, mode, batched_io)
@@ -74,18 +113,39 @@ class OffloadEngine:
                                        draft_len).cutoff_layer
         else:
             self.cutoff = self.store.num_layers - 1
-        # MoE-Infinity history counts
-        self.history = np.zeros((self.store.num_layers, cfg.num_experts))
+        # MoE-Infinity history counts — device-resident, updated in-graph
+        self.history_dev = jnp.zeros(
+            (self.store.num_layers, cfg.num_experts), jnp.float32)
         self._build_jitted()
         # stats
         self.layer_hits = 0
         self.layer_lookups = 0
         self.on_demand_loads = 0
+        self.host_syncs = 0
+        self.verify_blocks = 0
+        self.fast_blocks = 0
+        self.fast_fallbacks = 0
+        self._fast_active_dev = jnp.zeros((), jnp.float32)
+        # adaptive fast-path arming: cold caches go straight to the slow
+        # (miss-resolving) path; a zero-miss slow block re-arms the fast
+        # path.  After a misprediction, _fast_penalty demands that many
+        # consecutive clean slow blocks before re-arming, bounding the
+        # worst-case evict/fallback thrash to a fraction of blocks.
+        self._fast_ok = False
+        self._fast_penalty = 0
+
+    # ------------------------------------------------------------------ sync
+    def _readback(self, x):
+        """The ONLY device->host sync point in the engine.  Every blocking
+        transfer funnels through here so tests can spy on it and the stats
+        report an honest host-sync count."""
+        self.host_syncs += 1
+        return np.asarray(x)
 
     # ------------------------------------------------------------------ jit
     def _build_jitted(self):
         cfg = self.cfg
-        num_slots = self.cache.num_slots
+        mp = self.tparams["layers"]
 
         def attn_half(lp, x, cache_l, pos):
             h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
@@ -102,26 +162,12 @@ class OffloadEngine:
                                          cfg.num_experts_per_tok)
             return w, ids, probs
 
-        def cached_moe_apply(bufs, x, slot_ids, weights, choice_mask):
-            """x: [T,d]; slot_ids/weights/choice_mask: [T,k] -> [T,d].
-            Computes only choices where mask=1 (cached-first split)."""
-            T, k = slot_ids.shape
-            # masked choices are routed to the last real slot group (their
-            # combine weight is zero) — an out-of-range overflow group would
-            # leave ragged_dot rows uninitialized.
-            flat = jnp.where(choice_mask.reshape(-1) > 0,
-                             slot_ids.reshape(-1), num_slots - 1)
-            order = jnp.argsort(flat)
-            xs = x[order // k]
-            gs = jnp.bincount(flat, length=num_slots)
-            if "wg" in bufs:
-                h = jax.nn.silu(jax.lax.ragged_dot(xs, bufs["wg"], gs))
-                h = h * jax.lax.ragged_dot(xs, bufs["wu"], gs)
-            else:
-                h = jax.nn.gelu(jax.lax.ragged_dot(xs, bufs["wu"], gs))
-            ys = jax.lax.ragged_dot(h, bufs["wd"], gs)
-            w = (weights * choice_mask).reshape(-1)[order]
-            return jnp.zeros_like(x).at[order // k].add(ys * w[:, None])
+        def cached_moe_apply(bufs, x, slot_ids, weights):
+            """x: [T,d]; slot_ids/weights: [T,k] -> [T,d].  Slot-indexed
+            grouped kernel over the cache pool; slot_ids < 0 contribute 0 —
+            the hit/miss/wave split is pure masking, no gather on host."""
+            return ops.cache_moe(x, slot_ids, weights,
+                                 bufs["wu"], bufs["wd"], bufs.get("wg"))
 
         def shared_and_residual(lp, x, h2, y_experts):
             if cfg.num_shared_experts:
@@ -142,15 +188,86 @@ class OffloadEngine:
                 return jnp.einsum("bsd,vd->bsv", xf, self.tparams["wte"])
             return jnp.einsum("bsd,dv->bsv", xf, self.tparams["head"])
 
+        # per-MoE-layer params *without* the resident expert weights: the hot
+        # path must only ever read experts from the cache slot buffers.
+        lp_scan: Dict[str, Any] = {"ln1": mp["ln1"], "ln2": mp["ln2"],
+                                   "attn": mp["attn"],
+                                   "gate": mp["moe"]["gate"]}
+        if cfg.num_shared_experts:
+            lp_scan["shared"] = mp["moe"]["shared"]
+
+        def dense_stack(x, dcache, pos):
+            def dbody(carry, xs):
+                lp, cl = xs
+                xo, ncl = dense_block(lp, carry, cl, pos)
+                return xo, ncl
+            return jax.lax.scan(dbody, x,
+                                (self.tparams["dense_layers"], dcache))
+
+        def verify_fast(bufs, table, history, tokens, pos, tcache):
+            """Whole verify block as ONE device computation (lax.scan over
+            the stacked MoE layers), speculating that every routed expert is
+            cache-resident.  Returns (logits, all_hit, new_tcache,
+            new_history, n_active); nothing here syncs to host."""
+            x = embed(tokens)
+            T = tokens.shape[1]
+            new_tcache = dict(tcache)
+            if "dense_layers" in self.tparams:
+                x, new_tcache["dense_layers"] = dense_stack(
+                    x, tcache["dense_layers"], pos)
+
+            def mbody(carry, xs):
+                x, ok, nact = carry
+                lp, cl, trow = xs
+                x2, ncl, h2 = attn_half(lp, x, cl, pos)
+                w, ids, _ = gate_fn(lp["gate"], h2)
+                slot_ids = trow[ids]                      # [T,k]; -1 = miss
+                hit = slot_ids >= 0
+                ok = jnp.logical_and(ok, jnp.all(hit))
+                y = cached_moe_apply(bufs, h2.reshape(T, cfg.d_model),
+                                     slot_ids, jnp.where(hit, w, 0.0))
+                y3 = y.reshape(1, T, cfg.d_model)
+                if cfg.num_shared_experts:
+                    y3 = y3 + ffn_forward(lp["shared"], h2, "swiglu")
+                activated = jnp.zeros((cfg.num_experts,), jnp.int32
+                                      ).at[ids.reshape(-1)].add(1) > 0
+                nact = nact + jnp.sum(activated.astype(jnp.float32))
+                return (x2 + y3, ok, nact), (ncl, activated)
+
+            (x, ok, nact), (nlayers, act) = jax.lax.scan(
+                mbody, (x, jnp.bool_(True), jnp.float32(0.0)),
+                (lp_scan, tcache["layers"], table))
+            new_tcache["layers"] = nlayers
+            new_history = history + act.astype(history.dtype)
+            return head(x), ok, new_tcache, new_history, nact
+
         self._attn_half = jax.jit(attn_half)
         self._gate = jax.jit(gate_fn)
         self._moe_apply = jax.jit(cached_moe_apply)
         self._shared_res = jax.jit(shared_and_residual)
-        self._dense_block = jax.jit(dense_block)
+        self._dense_stack = jax.jit(dense_stack)
         self._embed = jax.jit(embed)
         self._head = jax.jit(head)
+        self._verify_fast = jax.jit(verify_fast)
+        # fixed-shape masked row add: one executable regardless of how many
+        # experts a layer activated (a [E]-gather scatter would retrace per
+        # distinct unique-count)
+        self._hist_add = jax.jit(lambda h, l, mask: h.at[l].add(mask))
         self._draft_step = jax.jit(functools.partial(
             self.draft.decode_step, collect_taps=True))
+
+    def _layer_params(self, l: int):
+        """Per-layer param slice for the slow path — attention + norms +
+        gate (+ shared experts), explicitly NOT the resident expert weights."""
+        mp = self.tparams["layers"]
+        moe_small: Dict[str, Any] = {"gate": mp["moe"]["gate"][l]}
+        if self.cfg.num_shared_experts:
+            moe_small["shared"] = jax.tree.map(lambda a: a[l],
+                                               mp["moe"]["shared"])
+        return {"ln1": jax.tree.map(lambda a: a[l], mp["ln1"]),
+                "ln2": jax.tree.map(lambda a: a[l], mp["ln2"]),
+                "attn": jax.tree.map(lambda a: a[l], mp["attn"]),
+                "moe": moe_small}
 
     # ------------------------------------------------------------- verification
     def _ensure_loaded(self, layer: int, ids: np.ndarray
@@ -163,30 +280,48 @@ class OffloadEngine:
 
     def _verify_block(self, tokens: jax.Array, pos: int, tcache):
         """Layer-wise target forward with cache-aware expert compute.
-        tokens: [1, N+1]."""
+        tokens: [1, N+1].  See module docstring for the fast/slow design."""
+        self.verify_blocks += 1
+        if self._fast_ok and self.policy != "adapmoe":
+            # snapshot + dispatch under the cache lock: a concurrent donating
+            # insert must not delete the buffer handle mid-dispatch.
+            with self.cache.lock:
+                bufs, table = self.cache.snapshot()
+                logits, ok, ncache, nhist, nact = self._verify_fast(
+                    bufs, table, self.history_dev, tokens, pos, tcache)
+            if bool(self._readback(ok)):          # sync 1 of ≤2 per block
+                self.history_dev = nhist
+                self._fast_active_dev = self._fast_active_dev + nact
+                self.fast_blocks += 1
+                return logits, ncache
+            self._fast_ok = False                 # mispredicted availability
+            self._fast_penalty = 2
+            self.fast_fallbacks += 1
+        return self._verify_block_slow(tokens, pos, tcache)
+
+    def _verify_block_slow(self, tokens: jax.Array, pos: int, tcache):
+        """Miss-resolution path: per-layer loop, one routing readback per MoE
+        layer, on-demand wave loading; re-arms the fast path when the whole
+        block resolved from cache."""
         cfg = self.cfg
         x = self._embed(tokens)
         T = tokens.shape[1]
-        kk = cfg.num_experts_per_tok
-        # leading dense layers (deepseek)
+        total_misses = 0
         if "dense_layers" in self.tparams:
-            for l in range(cfg.first_dense_layers):
-                lp = jax.tree.map(lambda a: a[l], self.tparams["dense_layers"])
-                cl = jax.tree.map(lambda a: a[l], tcache["dense_layers"])
-                x, ncl = self._dense_block(lp, x, cl, pos)
-                tcache["dense_layers"] = jax.tree.map(
-                    lambda full, new, l=l: full.at[l].set(new),
-                    tcache["dense_layers"], ncl)
-        moe_params = self.tparams["layers"]
+            x, tcache["dense_layers"] = self._dense_stack(
+                x, tcache["dense_layers"], pos)
+        new_layers = []
         for l in range(self.store.num_layers):
-            lp = jax.tree.map(lambda a: a[l], moe_params)
+            lp = self._layer_params(l)
             cl = jax.tree.map(lambda a: a[l], tcache["layers"])
             x, ncl, h2 = self._attn_half(lp, x, cl, pos)
-            tcache["layers"] = jax.tree.map(
-                lambda full, new, l=l: full.at[l].set(new), tcache["layers"], ncl)
+            new_layers.append(ncl)
             w, ids, probs = self._gate(lp["moe"]["gate"], h2)
-            ids_np = np.asarray(ids)
-            self.history[l][np.unique(ids_np)] += 1
+            ids_np = self._readback(ids)          # miss-resolution sync
+            act = np.zeros((cfg.num_experts,), np.float32)
+            act[np.unique(ids_np)] = 1.0
+            self.history_dev = self._hist_add(self.history_dev, l,
+                                              jnp.asarray(act))
             # AdapMoE baseline: predict next layer from *this* layer's gate
             # input using the target's own gates, synchronous prefetch.
             if self.policy == "adapmoe" and l + 1 < self.store.num_layers:
@@ -195,16 +330,17 @@ class OffloadEngine:
                 if miss:
                     self.prefetcher.submit(miss)     # vanilla mode: blocking
             hits, misses = self._ensure_loaded(l, ids_np)
-            hit_set = set(hits.keys())
-            hit_mask = np.isin(ids_np, [e for (_, e) in hit_set]).astype(np.float32)
-            # cached-first compute (dispatches async under jax)
-            slot_lut = np.zeros((cfg.num_experts,), np.int64)
+            total_misses += len(misses)
+            # cached-first compute (dispatches async under jax): hit experts'
+            # slots unmasked, everything else -1
+            slot_lut = np.full((cfg.num_experts,), -1, np.int64)
             for (_, e), s in hits.items():
                 slot_lut[e] = s
             xf = h2.reshape(T, cfg.d_model)
-            y = self._moe_apply(self.cache.bufs, xf,
-                                jnp.asarray(slot_lut[ids_np], jnp.int32),
-                                w, jnp.asarray(hit_mask))
+            with self.cache.lock:
+                bufs, _ = self.cache.snapshot()
+                y = self._moe_apply(bufs, xf,
+                                    jnp.asarray(slot_lut[ids_np], jnp.int32), w)
             if misses:
                 # on-demand batched loads, in cache-capacity-bounded waves:
                 # each wave's experts are loaded (evicting as needed — the
@@ -216,15 +352,23 @@ class OffloadEngine:
                     wave = misses[w0:w0 + wave_size]
                     arrays = self.store.fetch(wave)
                     slots = self.cache.insert(wave, arrays, mark_used=True)
+                    wave_lut = np.full((cfg.num_experts,), -1, np.int64)
                     for (key, s) in zip(wave, slots):
-                        slot_lut[key[1]] = s
-                    wave_experts = [e for (_, e) in wave]
-                    wave_mask = np.isin(ids_np, wave_experts).astype(np.float32)
-                    y = y + self._moe_apply(
-                        self.cache.bufs, xf,
-                        jnp.asarray(slot_lut[ids_np], jnp.int32),
-                        w, jnp.asarray(wave_mask))
+                        wave_lut[key[1]] = s
+                    with self.cache.lock:
+                        bufs, _ = self.cache.snapshot()
+                        y = y + self._moe_apply(
+                            bufs, xf,
+                            jnp.asarray(wave_lut[ids_np], jnp.int32), w)
             x = self._shared_res(lp, x, h2, y.reshape(1, T, cfg.d_model))
+        tcache["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+        if self.policy != "adapmoe":
+            if total_misses == 0:
+                if self._fast_penalty > 0:
+                    self._fast_penalty -= 1
+                self._fast_ok = self._fast_penalty == 0
+            else:
+                self._fast_ok = False
         return self._head(x), tcache
 
     # ---------------------------------------------------------------- generate
@@ -245,10 +389,14 @@ class OffloadEngine:
         while len(out) < max_new_tokens:
             # MoE-Infinity: request-level historical prefetch, all layers
             if self.policy == "moe-infinity":
+                hist = self._readback(self.history_dev)
                 for l in range(self.store.num_layers):
-                    top = np.argsort(-self.history[l])[: self.k]
+                    top = np.argsort(-hist[l])[: self.k]
                     keys = [(l, int(e)) for e in top]
-                    _, miss = self.cache.lookup(keys, touch=False)
+                    # while the fast verify path is armed it never touches
+                    # the LRU itself (that would need a device readback), so
+                    # predicted-hot experts carry the recency signal instead
+                    _, miss = self.cache.lookup(keys, touch=self._fast_ok)
                     if miss:
                         self.prefetcher.submit(miss)
             # ---- drafting stage (+ SP-MoE speculative prefetching) ----
@@ -263,14 +411,16 @@ class OffloadEngine:
                     tap_stack = self._draft_taps_for_moe(taps)
                     for l in range(min(self.cutoff + 1, self.store.num_layers)):
                         keys = self.predictor.predict_layer(l, tap_stack[l])
-                        _, miss = self.cache.lookup(keys, touch=False)
+                        # see moe-infinity note: predictions substitute for
+                        # LRU touches while the sync-free fast path is armed
+                        _, miss = self.cache.lookup(keys, touch=self._fast_ok)
                         if miss:
                             self.prefetcher.submit(miss)
             # ---- verification ----
             block = jnp.concatenate(
                 [cur, jnp.asarray([drafts], jnp.int32)], axis=1)
             tlogits, tcache = self._verify_block(block, pos, tcache)
-            greedy = np.asarray(jnp.argmax(tlogits, -1))[0]
+            greedy = self._readback(jnp.argmax(tlogits, -1))[0]  # accept sync
             d = np.asarray(drafts)
             match = d == greedy[:N]
             n_acc = int(np.cumprod(match.astype(np.int64)).sum())
@@ -282,17 +432,25 @@ class OffloadEngine:
             accepted += n_acc
         self.prefetcher.drain()
         dt = time.perf_counter() - t0
+        fast_active = (int(self._readback(self._fast_active_dev))
+                       if self.fast_blocks else 0)
+        lookups = self.layer_lookups + fast_active
+        hits = self.layer_hits + fast_active
         stats = {
             "wall_s": dt,
             "tpot_wall": dt / max(len(out), 1),
             "iterations": iters,
             "acceptance_rate": accepted / max(iters * N, 1),
-            "hit_rate": self.layer_hits / max(self.layer_lookups, 1),
+            "hit_rate": hits / max(lookups, 1),
             "on_demand_loads": self.on_demand_loads,
             "prefetched": self.prefetcher.loaded_count,
             "evictions": self.cache.evictions,
             "prefetch_evicted_unused": self.cache.prefetch_evicted,
             "cutoff_layer": self.cutoff,
+            "host_syncs": self.host_syncs,
+            "verify_blocks": self.verify_blocks,
+            "fast_blocks": self.fast_blocks,
+            "fast_fallbacks": self.fast_fallbacks,
         }
         return jnp.asarray(out[:max_new_tokens], jnp.int32), stats
 
@@ -308,6 +466,17 @@ class OffloadEngine:
         if stack.shape[0] >= n + off:
             return stack[off:off + n]
         return stack[:n]
+
+    def reset_stats(self):
+        """Zero the cumulative counters (cache + prefetcher + engine) so a
+        warmed engine can report clean steady-state numbers."""
+        self.layer_hits = self.layer_lookups = 0
+        self.on_demand_loads = self.host_syncs = 0
+        self.verify_blocks = self.fast_blocks = self.fast_fallbacks = 0
+        self._fast_active_dev = jnp.zeros((), jnp.float32)
+        self.cache.reset_stats()
+        self.prefetcher.loaded_count = 0
+        self.prefetcher.io_events = []
 
     def close(self):
         self.prefetcher.stop()

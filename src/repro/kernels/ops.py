@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as R
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.cache_moe import cache_moe as _cache_moe
 from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
@@ -46,6 +47,16 @@ def moe_gemm(xg, wg, wu, wd, valid, *, impl: str = "auto"):
         return R.moe_gemm_ref(xg, wg, wu, wd, valid)
     return _moe_gemm(xg, wg, wu, wd, valid,
                      interpret=(impl == "interpret" or not _on_tpu()))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def cache_moe(x, slot_ids, weights, wu, wd, wg=None, *, impl: str = "auto"):
+    """Slot-indexed grouped expert FFN over ExpertCache slot buffers
+    (SP-MoE verification hot path).  slot_ids < 0 contribute zero."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.cache_moe_ref(x, slot_ids, weights, wu, wd, wg)
+    return _cache_moe(x, slot_ids, weights, wu, wd, wg,
+                      interpret=(impl == "interpret" or not _on_tpu()))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "impl"))

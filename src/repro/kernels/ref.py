@@ -71,6 +71,30 @@ def moe_gemm_ref(xg: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# slot-indexed cache MoE oracle (SP-MoE verification hot path)
+# ---------------------------------------------------------------------------
+
+def cache_moe_ref(x: jax.Array, slot_ids: jax.Array, weights: jax.Array,
+                  wu: jax.Array, wd: jax.Array,
+                  wg: Optional[jax.Array] = None) -> jax.Array:
+    """x: [T, d]; slot_ids/weights: [T, k]; wu/wg: [S, d, f]; wd: [S, f, d]
+    -> [T, d].
+
+    Per (token, choice): y += w · FFN_{slot}(x); slot_ids < 0 contribute 0.
+    swiglu when wg is given, gelu-up otherwise.
+    """
+    s = jnp.clip(slot_ids, 0, wu.shape[0] - 1)
+    if wg is not None:
+        h = jax.nn.silu(jnp.einsum("td,tkdf->tkf", x, wg[s]))
+        h = h * jnp.einsum("td,tkdf->tkf", x, wu[s])
+    else:
+        h = jax.nn.gelu(jnp.einsum("td,tkdf->tkf", x, wu[s]))
+    y = jnp.einsum("tkf,tkfd->tkd", h, wd[s]).astype(jnp.float32)
+    w = jnp.where(slot_ids >= 0, weights, 0.0).astype(jnp.float32)
+    return jnp.sum(y * w[..., None], axis=1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Mamba2 SSD (state-space dual) chunked scan oracle
 # ---------------------------------------------------------------------------
 

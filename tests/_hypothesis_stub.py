@@ -1,0 +1,124 @@
+"""Minimal stand-in for the ``hypothesis`` package (not installed in this
+container).  Implements just the API surface the test-suite uses — ``given``,
+``settings`` and the ``integers / floats / sampled_from / lists / tuples``
+strategies — as a deterministic seeded random sampler.
+
+Semantics: ``@given(...)`` reruns the test body ``max_examples`` times with
+freshly drawn values (seeded per test name, so failures are reproducible).
+No shrinking, no database — on failure the offending drawn values are shown
+in the assertion context.
+
+Activated by tests/conftest.py only when the real package is missing, via
+``sys.modules`` registration, so installing real hypothesis transparently
+takes over.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq):
+    elems = list(seq)
+    return _Strategy(lambda rng: rng.choice(elems))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(elem: _Strategy, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+    return _Strategy(
+        lambda rng: [elem.example(rng) for _ in range(rng.randint(min_size, hi))])
+
+
+def tuples(*elems: _Strategy):
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator; records max_examples on the (already ``given``-wrapped) fn."""
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                kdrawn = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kdrawn, **kwargs)
+                except Exception as e:  # annotate with the failing example
+                    raise AssertionError(
+                        f"hypothesis-stub example {i}/{n} failed: "
+                        f"args={drawn} kwargs={kdrawn}: {e}") from e
+        # the drawn parameters are filled here, not by pytest: hide them so
+        # pytest doesn't try to resolve them as fixtures (wraps propagates
+        # __wrapped__, which inspect.signature would follow otherwise)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def install():
+    """Register this module as ``hypothesis`` (+``hypothesis.strategies``)."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists", "tuples",
+                 "booleans", "just"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -2,6 +2,12 @@
 CPU device; only launch/dryrun.py fabricates 512 devices."""
 import dataclasses
 
+try:                                    # the container has no hypothesis;
+    import hypothesis  # noqa: F401     # fall back to the deterministic stub
+except ModuleNotFoundError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
 import jax
 import pytest
 

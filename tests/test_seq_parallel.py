@@ -14,18 +14,17 @@ def test_seq_parallel_matches_reference(shards):
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.configs.registry import get_config
         from repro.models.registry import build_model
         from repro.models.mamba_sp import seq_parallel_forward
+        from repro.launch.mesh import _make_mesh
         cfg = get_config("mamba2-780m").reduced(dtype="float32", ssm_chunk=8)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
                                     cfg.vocab_size)
         ref, _ = model.forward(params, tokens)
-        mesh = jax.make_mesh((8 // {shards}, {shards}), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = _make_mesh((8 // {shards}, {shards}), ("data", "model"))
         with mesh:
             out = jax.jit(lambda p, t: seq_parallel_forward(p, t, cfg, mesh))(
                 params, tokens)
@@ -36,6 +35,9 @@ def test_seq_parallel_matches_reference(shards):
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                          text=True, timeout=600,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              # skip TPU-plugin probing (60s+ stall when a
+                              # libtpu is installed but no TPU is attached)
+                              "JAX_PLATFORMS": "cpu"})
     assert res.returncode == 0, res.stderr[-2000:]
     assert "ERR" in res.stdout
