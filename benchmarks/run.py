@@ -190,58 +190,49 @@ def fig4_latency_split():
 
 
 def engine_real():
-    """Cross-check: REAL OffloadEngine (reduced mixtral, CPU) — SP-MoE's hit
-    rate must beat on-demand's, as in the simulator."""
-    import dataclasses
+    """Cross-check: REAL serving engine (reduced mixtral, CPU) — SP-MoE's
+    hit rate must beat on-demand's, as in the simulator.  Goes through the
+    unified request API (core/engine.py)."""
     import jax
     from repro.configs.registry import get_config
-    from repro.core.runtime import OffloadEngine
-    from repro.models.registry import build_model
+    from repro.core.engine import Engine, EngineConfig, Request
 
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
-    dcfg = dataclasses.replace(cfg, num_experts=0, num_experts_per_tok=0,
-                               name="draft")
-    target = build_model(cfg)
-    draft = build_model(dcfg)
-    tparams = target.init(jax.random.PRNGKey(0))
-    dparams = draft.init(jax.random.PRNGKey(1))
+    tparams = None
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size)
     hits = {}
     for pol in ("on-demand", "spmoe"):
-        eng = OffloadEngine(cfg, dcfg, tparams, dparams, cache_slots=8,
-                            draft_len=4, policy=pol, max_seq=64)
-        t0 = time.perf_counter()
-        _, stats = eng.generate(prompt, 16)
-        wall = (time.perf_counter() - t0) * 1e6
-        eng.close()
-        hits[pol] = stats["hit_rate"]
+        config = EngineConfig(model=cfg, decode="sd", offload=pol,
+                              cache_slots=8, draft_len=4, max_seq=64)
+        with Engine(config, tparams) as eng:
+            tparams = eng.tparams          # share the init across engines
+            t0 = time.perf_counter()
+            res = eng.submit(Request(prompt=prompt, max_new_tokens=16))
+            wall = (time.perf_counter() - t0) * 1e6
+        m = res.metrics
+        hits[pol] = m.hit_rate
         _row(f"engine_real.mixtral-reduced.{POLICY_LABEL[pol]}", wall,
-             f"hit_rate={stats['hit_rate']:.3f};prefetched={stats['prefetched']}")
+             f"hit_rate={m.hit_rate:.3f};prefetched={m.prefetched}")
     assert hits["spmoe"] >= hits["on-demand"]
 
 
 def offload_micro(out_path: str = "BENCH_offload.json"):
-    """Real-OffloadEngine micro-benchmark: TPOT / hit rate / on-demand loads /
-    host-sync count, spmoe vs on-demand, written to ``out_path`` so the perf
-    trajectory of the verification hot path is tracked PR over PR.
+    """Real serving-engine micro-benchmark: TPOT / hit rate / on-demand
+    loads / host-sync count, spmoe vs on-demand, written to ``out_path`` so
+    the perf trajectory of the verification hot path is tracked PR over PR.
 
-    jit warmup: each engine generates once (compiles the fast+slow verify
-    paths), then the measured run reuses a fresh engine's caches but warm
-    compilation caches — TPOT reflects steady-state decode, not tracing.
+    Goes through the unified request API: one Engine per (setting, policy)
+    serves a warmup request (compiles fast+slow verify paths — the fast
+    path is additionally pre-traced at engine init) followed by 3 measured
+    requests; Metrics snapshots are per-request deltas, so no stat reset is
+    needed between runs and the best-of-3 reflects steady-state decode.
     """
-    import dataclasses
     import jax
     from repro.configs.registry import get_config
-    from repro.core.runtime import OffloadEngine
-    from repro.models.registry import build_model
+    from repro.core.engine import Engine, EngineConfig, Request
 
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
-    dcfg = dataclasses.replace(cfg, num_experts=0, num_experts_per_tok=0,
-                               name="draft")
-    target = build_model(cfg)
-    draft = build_model(dcfg)
-    tparams = target.init(jax.random.PRNGKey(0))
-    dparams = draft.init(jax.random.PRNGKey(1))
+    tparams = dparams = None
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0,
                                 cfg.vocab_size)
     n_tokens = 24
@@ -253,37 +244,37 @@ def offload_micro(out_path: str = "BENCH_offload.json"):
     results = {}
     for setting, slots in settings.items():
         for pol in ("spmoe", "on-demand"):
-            eng = OffloadEngine(cfg, dcfg, tparams, dparams,
-                                cache_slots=slots, draft_len=4,
-                                policy=pol, max_seq=96)
-            eng.generate(prompt, n_tokens)   # warm: compiles fast+slow paths
-            best = None
-            for _ in range(3):               # best-of-3: CPU wall clocks are
-                eng.reset_stats()            # noisy; min is noise-robust
-                t0 = time.perf_counter()
-                _, stats = eng.generate(prompt, n_tokens)
-                wall = (time.perf_counter() - t0) * 1e6
-                if best is None or stats["tpot_wall"] < best[0]["tpot_wall"]:
-                    best = (stats, wall)
-            stats, wall = best
-            eng.close()
+            config = EngineConfig(model=cfg, decode="sd", offload=pol,
+                                  cache_slots=slots, draft_len=4, max_seq=96)
+            with Engine(config, tparams, dparams) as eng:
+                tparams, dparams = eng.tparams, eng.dparams  # share init
+                eng.submit(Request(prompt=prompt, max_new_tokens=n_tokens))
+                best = None
+                for _ in range(3):           # best-of-3: CPU wall clocks are
+                    t0 = time.perf_counter()  # noisy; min is noise-robust
+                    res = eng.submit(Request(prompt=prompt,
+                                             max_new_tokens=n_tokens))
+                    wall = (time.perf_counter() - t0) * 1e6
+                    if best is None or res.metrics.tpot_wall < best[0].tpot_wall:
+                        best = (res.metrics, wall)
+            m, wall = best
             results[f"{setting}.{pol}"] = {
                 "cache_slots": slots,
-                "tpot_s": stats["tpot_wall"],
-                "hit_rate": stats["hit_rate"],
-                "on_demand_loads": stats["on_demand_loads"],
-                "host_syncs": stats["host_syncs"],
-                "verify_blocks": stats["verify_blocks"],
-                "fast_blocks": stats["fast_blocks"],
-                "fast_fallbacks": stats["fast_fallbacks"],
-                "prefetched": stats["prefetched"],
-                "acceptance_rate": stats["acceptance_rate"],
+                "tpot_s": m.tpot_wall,
+                "hit_rate": m.hit_rate,
+                "on_demand_loads": m.on_demand_loads,
+                "host_syncs": m.host_syncs,
+                "verify_blocks": m.verify_blocks,
+                "fast_blocks": m.fast_blocks,
+                "fast_fallbacks": m.fast_fallbacks,
+                "prefetched": m.prefetched,
+                "acceptance_rate": m.acceptance_rate,
             }
             _row(f"offload.{setting}.{POLICY_LABEL[pol]}", wall,
-                 f"tpot_ms={stats['tpot_wall']*1e3:.2f};"
-                 f"hit_rate={stats['hit_rate']:.3f};"
-                 f"host_syncs={stats['host_syncs']};"
-                 f"fast_blocks={stats['fast_blocks']}")
+                 f"tpot_ms={m.tpot_wall*1e3:.2f};"
+                 f"hit_rate={m.hit_rate:.3f};"
+                 f"host_syncs={m.host_syncs};"
+                 f"fast_blocks={m.fast_blocks}")
     results["meta"] = {
         "model": "mixtral-8x7b.reduced", "draft_len": 4,
         "n_tokens": n_tokens,

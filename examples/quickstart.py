@@ -1,17 +1,15 @@
 """Quickstart: SP-MoE serving a (reduced) Mixtral with speculative decoding
 and drafting-stage expert prefetching — the paper's full pipeline, end to
-end, on whatever device JAX has.
+end, on whatever device JAX has, through the unified request API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_config
-from repro.core.runtime import OffloadEngine
+from repro.core.engine import Engine, EngineConfig, Request
 from repro.core.sd import greedy_generate
 from repro.models.registry import build_model
 
@@ -19,34 +17,39 @@ from repro.models.registry import build_model
 def main():
     # reduced Mixtral-8x7B (same family: 8 experts, top-2, SWA) in f32
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
-    draft_cfg = dataclasses.replace(
-        cfg, num_experts=0, num_experts_per_tok=0, name="mistral-draft")
     print(f"target: {cfg.name}  ({cfg.num_layers}L, {cfg.num_experts} experts, "
           f"top-{cfg.num_experts_per_tok})")
 
     target = build_model(cfg)
-    draft = build_model(draft_cfg)
     tparams = target.init(jax.random.PRNGKey(0))
-    dparams = draft.init(jax.random.PRNGKey(1))
-
-    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0,
+                                cfg.vocab_size)
 
     # reference: plain target-only greedy decoding
     t0 = time.perf_counter()
     ref = greedy_generate(target, tparams, prompt, 24, 64)
     print(f"\ngreedy reference ({time.perf_counter()-t0:.1f}s): {ref.tolist()}")
 
-    # SP-MoE: experts offloaded to host, drafting-stage prefetch, LRU cache
-    eng = OffloadEngine(cfg, draft_cfg, tparams, dparams, cache_slots=8,
-                        draft_len=4, policy="spmoe", max_seq=64)
-    t0 = time.perf_counter()
-    out, stats = eng.generate(prompt, 24)
-    eng.close()
-    print(f"SP-MoE output     ({time.perf_counter()-t0:.1f}s): {out.tolist()}")
-    print(f"\nlossless: {out.tolist() == ref.tolist()}")
-    for k in ("hit_rate", "prefetched", "on_demand_loads", "acceptance_rate",
-              "cutoff_layer", "evictions"):
-        print(f"  {k}: {stats[k]}")
+    # SP-MoE: decode axis = speculative decoding, offload axis = drafting-
+    # stage prefetch into a fixed-slot LRU expert cache
+    config = EngineConfig(model=cfg, decode="sd", offload="spmoe",
+                          cache_slots=8, draft_len=4, max_seq=64)
+    with Engine(config, tparams) as eng:
+        # stream the first request token-by-token (per committed verify block)
+        t0 = time.perf_counter()
+        print("SP-MoE stream:    ", end="", flush=True)
+        for tok in eng.stream(Request(prompt=prompt, max_new_tokens=24)):
+            print(tok, end=" ", flush=True)
+        res = eng.last_result
+        print(f" ({time.perf_counter()-t0:.1f}s)")
+        print(f"\nlossless: {res.tokens == ref.tolist()}")
+        for k in ("hit_rate", "prefetched", "on_demand_loads",
+                  "acceptance_rate", "cutoff_layer", "evictions"):
+            print(f"  {k}: {res.metrics[k]}")
+        # request 2 reuses the warm expert cache — hit rate climbs
+        res2 = eng.submit(Request(prompt=prompt, max_new_tokens=24))
+        print(f"request 2 (warm cache) hit_rate: {res2.metrics.hit_rate:.2%} "
+              f"(request 1: {res.metrics.hit_rate:.2%})")
 
 
 if __name__ == "__main__":

@@ -1,21 +1,23 @@
 """End-to-end serving driver: compares the four offloading policies (the
-paper's frameworks) on the same reduced MoE model + prompt set, reporting
-hit rate / prefetch / eviction stats per policy and validating that every
-policy emits the identical (lossless) token stream.
+paper's frameworks) on the same reduced MoE model + prompt set through the
+unified request API (one Engine per policy serving all requests against a
+warm expert cache), reporting per-policy hit rate / prefetch / eviction
+stats and validating that every policy emits the identical (lossless)
+token stream.
 
     PYTHONPATH=src python examples/serve_spmoe.py [--arch deepseek-v2-lite-16b]
 """
 import argparse
-import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_config
-from repro.core.runtime import POLICIES, OffloadEngine
+from repro.core.engine import (Engine, EngineConfig, OffloadPolicy, Request,
+                               derive_draft_config)
 from repro.core.sd import greedy_generate
 from repro.models.registry import build_model
+
+OFFLOAD_POLICIES = [p.value for p in OffloadPolicy if p != OffloadPolicy.NONE]
 
 
 def main():
@@ -28,13 +30,10 @@ def main():
 
     cfg = get_config(args.arch).reduced(dtype="float32")
     assert cfg.is_moe, "pick an MoE arch"
-    dcfg = dataclasses.replace(cfg, num_experts=0, num_experts_per_tok=0,
-                               num_shared_experts=0, first_dense_layers=0,
-                               name="draft")
+    dcfg = derive_draft_config(cfg)
     target = build_model(cfg)
-    draft = build_model(dcfg)
     tparams = target.init(jax.random.PRNGKey(0))
-    dparams = draft.init(jax.random.PRNGKey(1))
+    dparams = build_model(dcfg).init(jax.random.PRNGKey(1))
 
     prompts = [jax.random.randint(jax.random.PRNGKey(10 + i), (1, 8), 0,
                                   cfg.vocab_size)
@@ -44,22 +43,19 @@ def main():
 
     print(f"{'policy':14s} {'lossless':9s} {'hit_rate':9s} {'prefetched':11s} "
           f"{'on_demand':10s} {'evict':6s} {'wall_s':7s}")
-    for policy in POLICIES:
-        eng = OffloadEngine(cfg, dcfg, tparams, dparams,
-                            cache_slots=args.cache_slots, draft_len=4,
-                            policy=policy, max_seq=64)
-        ok, hit, pf, od, ev, wall = True, 0.0, 0, 0, 0, 0.0
-        for p, ref in zip(prompts, refs):
-            out, stats = eng.generate(p, args.tokens)
-            ok &= out.tolist() == ref
-            hit = stats["hit_rate"]
-            pf += stats["prefetched"]
-            od = stats["on_demand_loads"]
-            ev = stats["evictions"]
-            wall += stats["wall_s"]
-        eng.close()
-        print(f"{policy:14s} {str(ok):9s} {hit:9.2%} {pf:<11d} {od:<10d} "
-              f"{ev:<6d} {wall:7.1f}")
+    for policy in OFFLOAD_POLICIES:
+        config = EngineConfig(model=cfg, draft=dcfg, decode="sd",
+                              offload=policy, cache_slots=args.cache_slots,
+                              draft_len=4, max_seq=64)
+        with Engine(config, tparams, dparams) as eng:
+            ok = True
+            for p, ref in zip(prompts, refs):
+                res = eng.submit(Request(prompt=p, max_new_tokens=args.tokens))
+                ok &= res.tokens == ref
+            m = eng.metrics()    # cumulative across the request stream
+        print(f"{policy:14s} {str(ok):9s} {m.hit_rate:9.2%} "
+              f"{m.prefetched:<11d} {m.on_demand_loads:<10d} "
+              f"{m.evictions:<6d} {m.wall_s:7.1f}")
 
 
 if __name__ == "__main__":

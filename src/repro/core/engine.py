@@ -1,0 +1,429 @@
+"""Unified request-level serving facade (the public SP-MoE API).
+
+The paper-experiment entry points (``greedy_generate`` / ``sd_generate`` /
+``sd_generate_adaptive`` in ``core/sd.py``, ``OffloadEngine.generate`` in
+``core/runtime.py``) remain as the *internal* layer; this module is the one
+shape every caller goes through:
+
+Two-axis policy model
+---------------------
+Serving behaviour decomposes into two orthogonal choices:
+
+* ``DecodePolicy`` — *how tokens are proposed and committed*:
+  ``greedy`` (plain autoregressive), ``sd`` (fixed-length speculative
+  decoding), ``sd-adaptive`` (acceptance-EWMA-controlled draft length).
+* ``OffloadPolicy`` — *where expert weights live and how they move*:
+  ``none`` (all weights resident), ``spmoe`` (drafting-stage cross-model
+  prefetch, paper Algorithm 1/2), ``adapmoe`` / ``moe-infinity`` /
+  ``on-demand`` (the paper's baselines).
+
+Every decode × offload combination is lossless: the emitted stream is
+bit-identical to target-only greedy decoding.  Note ``greedy × spmoe``
+degenerates to on-demand loading — SP-MoE's prefetch signal *is* the
+drafting stage, so without drafts there is nothing to predict from.
+
+Request lifecycle
+-----------------
+A long-lived :class:`Engine` serves a stream of :class:`Request` objects
+against ONE warm :class:`~repro.core.cache.ExpertCache`, one prefetcher and
+one set of compiled step functions; only the KV/session state is
+per-request.  ``submit`` is the one-shot call; ``stream`` yields token ids
+as each verify block commits (granularity: one chunk per committed block,
+one token per step for greedy).  ``stop_tokens`` end a request early —
+truncation happens on the committed stream, so it is honoured identically
+by every decode × offload combination.
+
+Each finished request returns a :class:`GenerationResult` carrying a
+per-request :class:`Metrics` snapshot (counter deltas for exactly that
+request); ``Engine.metrics()`` is the cumulative view.  The keys are the
+same on every path — paths that don't exercise a counter report zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from enum import Enum
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cutoff import HardwareProfile
+from repro.core import sd as S
+
+
+class DecodePolicy(str, Enum):
+    """How tokens are proposed/committed (axis 1 of the policy model)."""
+    GREEDY = "greedy"
+    SD = "sd"
+    SD_ADAPTIVE = "sd-adaptive"
+
+
+class OffloadPolicy(str, Enum):
+    """Where expert weights live / how they move (axis 2)."""
+    NONE = "none"
+    SPMOE = "spmoe"
+    ADAPMOE = "adapmoe"
+    MOE_INFINITY = "moe-infinity"
+    ON_DEMAND = "on-demand"
+
+
+DECODE_POLICIES: Tuple[str, ...] = tuple(p.value for p in DecodePolicy)
+OFFLOAD_POLICIES: Tuple[str, ...] = tuple(p.value for p in OffloadPolicy)
+
+
+def derive_draft_config(cfg: ModelConfig) -> ModelConfig:
+    """Default draft for a target: its dense sibling (MoE targets) or a
+    half-depth copy (dense targets) — the reduced-scale stand-in for the
+    paper's distilled draft models (Table 1)."""
+    if cfg.is_moe:
+        return dataclasses.replace(
+            cfg, num_experts=0, num_experts_per_tok=0, num_shared_experts=0,
+            first_dense_layers=0, name=cfg.name + "-draft")
+    return dataclasses.replace(cfg, num_layers=max(2, cfg.num_layers // 2),
+                               name=cfg.name + "-draft")
+
+
+@dataclass
+class EngineConfig:
+    """Everything an :class:`Engine` needs, in one typed object (replaces the
+    ``OffloadEngine.__init__`` kwarg pile and the mixed ``--policy`` string).
+
+    ``decode`` × ``offload`` select the serving behaviour; the remaining
+    fields parameterize it.  ``draft`` defaults to
+    :func:`derive_draft_config` of ``model`` when a draft is needed.
+    """
+    model: ModelConfig
+    draft: Optional[ModelConfig] = None
+    decode: str = DecodePolicy.SD.value
+    offload: str = OffloadPolicy.NONE.value
+    # speculative decoding
+    draft_len: int = 4                  # fixed N for decode == "sd"
+    min_draft_len: int = 1              # adaptive controller bounds
+    max_draft_len: int = 8
+    draft_ewma: float = 0.5             # acceptance EWMA smoothing
+    # offload plane
+    cache_slots: int = 8
+    cutoff: Optional[int] = None        # None -> solver/profile/all layers
+    k_prefetch: Optional[int] = None    # None -> num_experts_per_tok
+    prefetch_mode: str = "worker"
+    batched_io: bool = True
+    profile: Optional[HardwareProfile] = None
+    # session
+    max_seq: int = 512
+    precompile: bool = True             # trace fast verify path at init
+
+    def __post_init__(self):
+        self.decode = DecodePolicy(self.decode).value
+        self.offload = OffloadPolicy(self.offload).value
+        if self.offload != OffloadPolicy.NONE.value and not self.model.is_moe:
+            raise ValueError(
+                f"offload policy {self.offload!r} requires an MoE target "
+                f"(model {self.model.name!r} is dense)")
+        if self.decode == DecodePolicy.SD.value and self.draft_len < 1:
+            raise ValueError("decode='sd' needs draft_len >= 1")
+        if not 1 <= self.min_draft_len <= self.max_draft_len:
+            raise ValueError("need 1 <= min_draft_len <= max_draft_len")
+
+    @property
+    def needs_draft(self) -> bool:
+        return self.decode != DecodePolicy.GREEDY.value
+
+    def resolved_draft(self) -> ModelConfig:
+        return self.draft if self.draft is not None \
+            else derive_draft_config(self.model)
+
+    @property
+    def initial_draft_len(self) -> int:
+        """Draft tokens per iteration at session start (0 = no drafting)."""
+        if self.decode == DecodePolicy.GREEDY.value:
+            return 0
+        if self.decode == DecodePolicy.SD_ADAPTIVE.value:
+            return self.min_draft_len
+        return self.draft_len
+
+
+@dataclass
+class Request:
+    """One generation request.  ``prompt`` is a ``[1, P]`` int array (or a
+    plain list of token ids).  Generation ends after ``max_new_tokens``
+    tokens or — on every decode × offload combination identically — right
+    after the first emitted token in ``stop_tokens``."""
+    prompt: Any
+    max_new_tokens: int = 32
+    stop_tokens: Sequence[int] = ()
+    request_id: Optional[str] = None
+
+    def prompt_array(self) -> jax.Array:
+        p = self.prompt
+        if not isinstance(p, (jax.Array, np.ndarray)):
+            p = jnp.asarray([list(p)], jnp.int32)
+        p = jnp.asarray(p, jnp.int32)
+        if p.ndim == 1:
+            p = p[None, :]
+        assert p.ndim == 2 and p.shape[0] == 1, "requests are batch-1 [1, P]"
+        return p
+
+
+# the counters OffloadEngine.counters() exposes — the ONE list the runtime
+# snapshot, the per-request delta, and the legacy stats dict all iterate
+# (each name is also a Metrics field)
+RUNTIME_COUNTER_KEYS = ("lookups", "hits", "on_demand_loads", "prefetched",
+                        "evictions", "prefetch_evicted_unused", "host_syncs",
+                        "verify_blocks", "fast_blocks", "fast_fallbacks",
+                        "iterations", "drafted", "accepted")
+
+# counter fields that accumulate / subtract when combining Metrics
+_COUNTERS = ("requests", "tokens") + RUNTIME_COUNTER_KEYS
+
+
+@dataclass
+class Metrics:
+    """One typed stats object for every serving path — identical keys
+    whether the request ran greedy × none or sd-adaptive × spmoe.  Raw
+    counters are stored; ratios are derived properties so per-request
+    snapshots and the cumulative view stay consistent under addition."""
+    requests: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+    iterations: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    # offload plane (zero when offload == "none")
+    lookups: int = 0
+    hits: int = 0
+    on_demand_loads: int = 0
+    prefetched: int = 0
+    evictions: int = 0
+    prefetch_evicted_unused: int = 0
+    host_syncs: int = 0
+    verify_blocks: int = 0
+    fast_blocks: int = 0
+    fast_fallbacks: int = 0
+    cutoff_layer: int = -1              # configuration echo, not a counter
+
+    # ------------------------------------------------------------- derived
+    @property
+    def tpot_wall(self) -> float:
+        return self.wall_s / max(self.tokens, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.drafted, 1)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+    @property
+    def tokens_per_iteration(self) -> float:
+        return self.tokens / max(self.iterations, 1)
+
+    # ------------------------------------------------------------ algebra
+    def add(self, other: "Metrics") -> "Metrics":
+        """Accumulate ``other`` into self (cumulative view)."""
+        for f in _COUNTERS:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.wall_s += other.wall_s
+        self.cutoff_layer = other.cutoff_layer
+        return self
+
+    def as_dict(self) -> Dict[str, float]:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d.update(tpot_wall=self.tpot_wall, acceptance_rate=self.acceptance_rate,
+                 hit_rate=self.hit_rate,
+                 tokens_per_iteration=self.tokens_per_iteration)
+        return d
+
+    def __getitem__(self, key: str):
+        return self.as_dict()[key]
+
+
+@dataclass
+class GenerationResult:
+    """Outcome of one request: the committed tokens, why generation stopped
+    (``"length"`` or ``"stop"``), and that request's Metrics delta."""
+    tokens: List[int]
+    finish_reason: str
+    metrics: Metrics
+    request_id: Optional[str] = None
+
+    def token_array(self) -> jax.Array:
+        return jnp.asarray(self.tokens, jnp.int32)
+
+
+class _StopHit(Exception):
+    """Internal: a stop token committed mid-chunk."""
+
+
+class Engine:
+    """Long-lived serving engine: one warm expert cache / prefetcher / set of
+    compiled steps, many requests.
+
+    ``tparams`` / ``dparams`` may be omitted, in which case the models are
+    initialized from ``seed`` / ``draft_seed`` (the convention every example
+    and test in this repo uses).  ``close()`` (or use as a context manager)
+    stops the prefetch worker.
+    """
+
+    def __init__(self, config: EngineConfig, tparams=None, dparams=None, *,
+                 seed: int = 0, draft_seed: int = 1):
+        from repro.models.registry import build_model   # local: avoid cycle
+        self.config = config
+        self.target = build_model(config.model)
+        self.tparams = tparams if tparams is not None \
+            else self.target.init(jax.random.PRNGKey(seed))
+        self.draft_cfg = config.resolved_draft() if config.needs_draft else None
+        self.draft = build_model(self.draft_cfg) if self.draft_cfg else None
+        self.dparams = None
+        if self.draft is not None:
+            self.dparams = dparams if dparams is not None \
+                else self.draft.init(jax.random.PRNGKey(draft_seed))
+        self.runtime = None             # OffloadEngine when offload != none
+        if config.offload != OffloadPolicy.NONE.value:
+            from repro.core.runtime import OffloadEngine
+            self.runtime = OffloadEngine(config, self.tparams, self.dparams,
+                                         target=self.target, draft=self.draft)
+        # per-engine compiled-step caches (warm across requests)
+        self._sd_steps: Dict[int, Any] = {}
+        self._greedy_step = None
+        self._cum = Metrics(cutoff_layer=self.cutoff_layer)
+        self.last_result: Optional[GenerationResult] = None
+        self._closed = False
+
+    # ----------------------------------------------------------- properties
+    @property
+    def cutoff_layer(self) -> int:
+        return self.runtime.cutoff if self.runtime is not None else -1
+
+    # ------------------------------------------------------------- serving
+    def submit(self, request: Request) -> GenerationResult:
+        """One-shot: run the request to completion, return the result."""
+        for _ in self.stream(request):
+            pass
+        return self.last_result
+
+    def stream(self, request: Request) -> Iterator[int]:
+        """Yield token ids as each verify block commits.  After exhaustion
+        the request's :class:`GenerationResult` is at ``self.last_result``."""
+        assert not self._closed, "engine is closed"
+        prompt = request.prompt_array()
+        need = prompt.shape[1] + request.max_new_tokens + \
+            self._max_block_len() + 1
+        assert need <= self.config.max_seq, (
+            f"request needs {need} positions but max_seq is "
+            f"{self.config.max_seq}; raise EngineConfig.max_seq")
+        stop = set(int(t) for t in request.stop_tokens)
+        before = self._counters()
+        sstats: Dict[str, Any] = {"iterations": 0, "drafted": 0, "accepted": 0}
+        gen = self._chunk_stream(prompt, request.max_new_tokens, sstats)
+        emitted: List[int] = []
+        finish = "length"
+        # wall_s accumulates only time spent INSIDE the chunk generator (the
+        # decode work), not consumer time between yields — so streamed and
+        # one-shot requests report comparable per-request latency.
+        wall = 0.0
+        try:
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    chunk = next(gen)
+                except StopIteration:
+                    wall += time.perf_counter() - t0
+                    break
+                wall += time.perf_counter() - t0
+                for tok in chunk:
+                    emitted.append(int(tok))
+                    yield int(tok)
+                    if int(tok) in stop:
+                        finish = "stop"
+                        raise _StopHit
+        except _StopHit:
+            pass
+        finally:
+            t0 = time.perf_counter()
+            gen.close()               # offload path drains the prefetcher
+            wall += time.perf_counter() - t0
+            self.last_result = self._finish(request, emitted, finish, wall,
+                                            before, sstats)
+
+    def metrics(self) -> Metrics:
+        """Cumulative Metrics across every request this engine served."""
+        return dataclasses.replace(self._cum)
+
+    def reset_stats(self):
+        """Zero the cumulative counters (engine + cache + prefetcher) so a
+        warmed engine reports clean steady-state numbers."""
+        self._cum = Metrics(cutoff_layer=self.cutoff_layer)
+        if self.runtime is not None:
+            self.runtime.reset_stats()
+
+    def close(self):
+        if not self._closed and self.runtime is not None:
+            self.runtime.close()
+        self._closed = True
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------ internals
+    def _max_block_len(self) -> int:
+        cfg = self.config
+        if cfg.decode == DecodePolicy.SD_ADAPTIVE.value:
+            return cfg.max_draft_len + 1
+        return cfg.initial_draft_len + 1
+
+    def _chunk_stream(self, prompt, max_new_tokens, sstats):
+        """The per-combination committed-chunk generator."""
+        cfg = self.config
+        if self.runtime is not None:
+            return self.runtime.generate_stream(prompt, max_new_tokens)
+        if cfg.decode == DecodePolicy.GREEDY.value:
+            if self._greedy_step is None:
+                self._greedy_step = S.make_greedy_step(self.target)
+            return S.greedy_stream(self.target, self.tparams, prompt,
+                                   max_new_tokens, cfg.max_seq,
+                                   stats=sstats, step=self._greedy_step)
+        if cfg.decode == DecodePolicy.SD.value:
+            step = self._sd_step_for(cfg.draft_len)
+            return S.sd_stream(self.draft, self.target, self.dparams,
+                               self.tparams, prompt, max_new_tokens,
+                               cfg.draft_len, cfg.max_seq,
+                               stats=sstats, step=step)
+        return S.sd_adaptive_stream(self.draft, self.target, self.dparams,
+                                    self.tparams, prompt, max_new_tokens,
+                                    cfg.max_seq, min_len=cfg.min_draft_len,
+                                    max_len=cfg.max_draft_len,
+                                    ewma=cfg.draft_ewma, stats=sstats,
+                                    step_for=self._sd_step_for)
+
+    def _sd_step_for(self, n: int):
+        if n not in self._sd_steps:
+            self._sd_steps[n] = jax.jit(
+                S.make_sd_step(self.draft, self.target, n))
+        return self._sd_steps[n]
+
+    def _counters(self) -> Dict[str, int]:
+        return self.runtime.counters() if self.runtime is not None else {}
+
+    def _finish(self, request, emitted, finish, wall, before, sstats
+                ) -> GenerationResult:
+        after = self._counters()
+        m = Metrics(requests=1, tokens=len(emitted), wall_s=wall,
+                    cutoff_layer=self.cutoff_layer)
+        if after:
+            for k in RUNTIME_COUNTER_KEYS:
+                setattr(m, k, after[k] - before.get(k, 0))
+        else:
+            m.iterations = sstats["iterations"]
+            m.drafted = sstats["drafted"]
+            m.accepted = sstats["accepted"]
+        self._cum.add(m)
+        return GenerationResult(tokens=emitted, finish_reason=finish,
+                                metrics=m, request_id=request.request_id)

@@ -113,6 +113,13 @@ class Prefetcher:
         self.loaded_count += len(keys)
 
     # ------------------------------------------------------------------ admin
+    def reset_stats(self):
+        """Zero the I/O accounting (loaded_count / io_events).  Owned here so
+        the engine's reset doesn't poke prefetcher internals; in-flight task
+        state is untouched — call ``drain()`` first for a clean cut."""
+        self.loaded_count = 0
+        self.io_events = []
+
     def drain(self):
         """Block until every submitted task has fully executed and the device
         transfers have landed.  Condition-variable wait — no busy-wait, and a

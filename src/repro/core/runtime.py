@@ -50,27 +50,41 @@ Baseline policies (for the paper's comparisons) plug into the same loop:
   request-level, depth-unbounded), adapmoe (same-model next-layer gating,
   synchronous prefetch — always the slow path, per its design).
 
-Host-sync accounting: every blocking device->host readback in the engine
-goes through ``_readback`` (a test hook — tests/test_offload_hotpath.py spies
-on it to enforce the ≤2-syncs-per-block contract) and is counted in
-``stats["host_syncs"]``.
+Host-sync accounting: every blocking device->host readback on the DECODE
+path goes through ``_readback`` (a test hook — tests/test_offload_hotpath.py
+spies on it to enforce the ≤2-syncs-per-block contract) and is counted in
+the ``host_syncs`` counter.  Metrics-plane readbacks (the ``counters()``
+snapshot of the device-side fast-path hit accumulator, taken once per
+request at commit time) sit outside the decode loop and are intentionally
+not counted.
+
+This engine is the *internal* offload layer: construct it from an
+``EngineConfig`` (core/engine.py) — the public request/stream API is
+``repro.core.engine.Engine``, which owns one OffloadEngine for the session
+and serves many requests against its warm cache.  The decode axis
+(greedy | sd | sd-adaptive) is honoured here too: greedy runs 1-token
+verify blocks with no drafting stage (note SP-MoE's prefetch signal IS the
+drafting stage, so ``greedy × spmoe`` degenerates to on-demand loading),
+sd-adaptive drives the same EWMA draft-length controller as core/sd.py.
 """
 from __future__ import annotations
 
 import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.cache import ExpertCache, ExpertKey
-from repro.core.cutoff import CutoffDecision, HardwareProfile, solve_cutoff
+from repro.core.cutoff import solve_cutoff
+from repro.core.engine import (RUNTIME_COUNTER_KEYS, DecodePolicy,
+                               EngineConfig)
 from repro.core.offload import HostExpertStore
 from repro.core.predictor import ExpertPredictor
 from repro.core.prefetcher import Prefetcher
+from repro.core import sd as S
 from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.moe import gate_topk, ffn_forward
@@ -78,44 +92,59 @@ from repro.models.transformer import DecoderLM
 
 POLICIES = ("spmoe", "adapmoe", "moe-infinity", "on-demand")
 
+# counters() keys — single source of truth in core/engine.py (the Engine's
+# per-request delta iterates the same tuple)
+_COUNTER_KEYS = RUNTIME_COUNTER_KEYS
+
 
 class OffloadEngine:
-    def __init__(self, cfg: ModelConfig, draft_cfg: ModelConfig,
-                 tparams, dparams, *, cache_slots: int, draft_len: int = 4,
-                 policy: str = "spmoe", cutoff: Optional[int] = None,
-                 k_prefetch: Optional[int] = None,
-                 prefetch_mode: str = "worker", batched_io: bool = True,
-                 profile: Optional[HardwareProfile] = None,
-                 max_seq: int = 512):
-        assert policy in POLICIES
+    def __init__(self, config: EngineConfig, tparams, dparams, *,
+                 target=None, draft=None):
+        """``target``/``draft`` accept the caller's already-built models
+        (core/engine.py passes its own); built here when omitted.  Greedy
+        decode has no drafting stage, so no draft model exists at all."""
+        cfg = config.model
+        assert config.offload in POLICIES, config.offload
         assert cfg.is_moe, "offload engine targets MoE models"
-        self.cfg, self.draft_cfg = cfg, draft_cfg
-        self.policy = policy
-        self.draft_len = draft_len
-        self.max_seq = max_seq
-        self.target = DecoderLM(cfg)
-        self.draft = DecoderLM(draft_cfg)
+        self.config = config
+        self.cfg = cfg
+        self.policy = config.offload
+        self.decode = config.decode
+        self.draft_len = config.initial_draft_len
+        self.max_seq = config.max_seq
+        self.target = target if target is not None else DecoderLM(cfg)
+        if config.needs_draft:
+            self.draft = draft if draft is not None \
+                else DecoderLM(config.resolved_draft())
+        else:
+            self.draft = None
+        self.draft_cfg = self.draft.cfg if self.draft is not None else None
         self.tparams, self.dparams = tparams, dparams
         self.store = HostExpertStore(cfg, tparams)
         self.cache = ExpertCache(
-            cache_slots, self.store.buffer_shapes(), jnp.dtype(cfg.dtype),
+            config.cache_slots, self.store.buffer_shapes(),
+            jnp.dtype(cfg.dtype),
             table_shape=(self.store.num_layers, cfg.num_experts))
-        mode = prefetch_mode if policy in ("spmoe", "moe-infinity") else (
-            "vanilla" if policy == "adapmoe" else "off")
-        self.prefetcher = Prefetcher(self.store, self.cache, mode, batched_io)
-        self.k = k_prefetch if k_prefetch is not None else cfg.num_experts_per_tok
+        mode = config.prefetch_mode if self.policy in ("spmoe", "moe-infinity") \
+            else ("vanilla" if self.policy == "adapmoe" else "off")
+        self.prefetcher = Prefetcher(self.store, self.cache, mode,
+                                     config.batched_io)
+        self.k = config.k_prefetch if config.k_prefetch is not None \
+            else cfg.num_experts_per_tok
         self.predictor = ExpertPredictor(cfg, tparams, self.k)
         # cutoff layer from the analytical model (or explicit override)
-        if cutoff is not None:
-            self.cutoff = cutoff
-        elif profile is not None:
-            self.cutoff = solve_cutoff(profile, self.k, self.store.num_layers,
-                                       draft_len).cutoff_layer
+        if config.cutoff is not None:
+            self.cutoff = config.cutoff
+        elif config.profile is not None:
+            self.cutoff = solve_cutoff(config.profile, self.k,
+                                       self.store.num_layers,
+                                       max(self.draft_len, 1)).cutoff_layer
         else:
             self.cutoff = self.store.num_layers - 1
         # MoE-Infinity history counts — device-resident, updated in-graph
         self.history_dev = jnp.zeros(
             (self.store.num_layers, cfg.num_experts), jnp.float32)
+        self._fast_traces = 0     # trace-time counter (retrace regression)
         self._build_jitted()
         # stats
         self.layer_hits = 0
@@ -125,7 +154,11 @@ class OffloadEngine:
         self.verify_blocks = 0
         self.fast_blocks = 0
         self.fast_fallbacks = 0
+        self.iterations = 0
+        self.drafted = 0
+        self.accepted = 0
         self._fast_active_dev = jnp.zeros((), jnp.float32)
+        self._fast_active_cache = (0, 0)   # (fast_blocks at readback, value)
         # adaptive fast-path arming: cold caches go straight to the slow
         # (miss-resolving) path; a zero-miss slow block re-arms the fast
         # path.  After a misprediction, _fast_penalty demands that many
@@ -133,6 +166,8 @@ class OffloadEngine:
         # worst-case evict/fallback thrash to a fraction of blocks.
         self._fast_ok = False
         self._fast_penalty = 0
+        if config.precompile and self.policy != "adapmoe":
+            self._precompile_fast()
 
     # ------------------------------------------------------------------ sync
     def _readback(self, x):
@@ -209,6 +244,7 @@ class OffloadEngine:
             the stacked MoE layers), speculating that every routed expert is
             cache-resident.  Returns (logits, all_hit, new_tcache,
             new_history, n_active); nothing here syncs to host."""
+            self._fast_traces += 1        # trace-time side effect only
             x = embed(tokens)
             T = tokens.shape[1]
             new_tcache = dict(tcache)
@@ -253,8 +289,22 @@ class OffloadEngine:
         # experts a layer activated (a [E]-gather scatter would retrace per
         # distinct unique-count)
         self._hist_add = jax.jit(lambda h, l, mask: h.at[l].add(mask))
-        self._draft_step = jax.jit(functools.partial(
+        self._draft_step = (jax.jit(functools.partial(
             self.draft.decode_step, collect_taps=True))
+            if self.draft is not None else None)
+
+    def _precompile_fast(self):
+        """Trace + compile ``_verify_fast`` for the decode block shape at
+        engine init, so the first armed fast block doesn't hold the cache
+        lock across a trace (ROADMAP open item).  The dummy call's inputs
+        mirror the decode-time signature exactly — [1, N+1] int32 tokens, a
+        python-int position, the session-shaped KV cache — so the jit cache
+        entry is the one ``_verify_block`` hits (regression:
+        tests/test_engine.py::test_no_retrace_on_second_fast_block)."""
+        tokens = jnp.zeros((1, self.draft_len + 1), jnp.int32)
+        tcache = self.target.init_cache(1, self.max_seq)
+        bufs, table = self.cache.snapshot()   # init: nothing inserts yet
+        self._verify_fast(bufs, table, self.history_dev, tokens, 0, tcache)
 
     def _layer_params(self, l: int):
         """Per-layer param slice for the slow path — attention + norms +
@@ -372,87 +422,149 @@ class OffloadEngine:
         return self._head(x), tcache
 
     # ---------------------------------------------------------------- generate
-    def generate(self, prompt: jax.Array, max_new_tokens: int
-                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    def generate_stream(self, prompt: jax.Array, max_new_tokens: int
+                        ) -> Iterator[List[int]]:
+        """Streaming decode loop: yields one List[int] chunk per committed
+        verify block (chunks are clipped to the max_new_tokens budget).  The
+        decode axis of the EngineConfig selects the block schedule: greedy =
+        1-token blocks with no drafting, sd = fixed N, sd-adaptive = the
+        EWMA controller of core/sd.py.  Cumulative engine counters
+        (iterations/drafted/accepted/...) update per iteration, so an early
+        generator close (stop token) leaves consistent stats; the prefetcher
+        is drained on every exit path."""
         assert prompt.shape[0] == 1
-        cfg = self.cfg
-        N = self.draft_len
-        t0 = time.perf_counter()
+        if max_new_tokens <= 0:
+            return
+        cfg = self.config
+        N = self.draft_len          # 0 for greedy decode
+        adaptive = self.decode == DecodePolicy.SD_ADAPTIVE.value
+        acc_ewma = 0.5
         # prefill: run target through the cache-aware path too (loads warm it)
-        _, dcache = self.draft.prefill(self.dparams, prompt, self.max_seq)
+        dcache = None
+        if N > 0:
+            _, dcache = self.draft.prefill(self.dparams, prompt, self.max_seq)
         tcache = self.target.init_cache(1, self.max_seq)
         logits, tcache = self._verify_block(prompt, 0, tcache)
         cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         pos = prompt.shape[1]
-        out = [int(cur[0, 0])]
-        iters = accepted = 0
-        while len(out) < max_new_tokens:
-            # MoE-Infinity: request-level historical prefetch, all layers
-            if self.policy == "moe-infinity":
-                hist = self._readback(self.history_dev)
-                for l in range(self.store.num_layers):
-                    top = np.argsort(-hist[l])[: self.k]
-                    keys = [(l, int(e)) for e in top]
-                    # while the fast verify path is armed it never touches
-                    # the LRU itself (that would need a device readback), so
-                    # predicted-hot experts carry the recency signal instead
-                    _, miss = self.cache.lookup(keys, touch=self._fast_ok)
-                    if miss:
-                        self.prefetcher.submit(miss)
-            # ---- drafting stage (+ SP-MoE speculative prefetching) ----
-            drafts = []
-            tok = cur
-            for i in range(N):
-                lg, dcache, taps = self._draft_step(self.dparams, dcache, tok,
-                                                    jnp.int32(pos + i))
-                tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
-                drafts.append(int(tok[0, 0]))
-                if self.policy == "spmoe" and self.cutoff >= 0:
-                    tap_stack = self._draft_taps_for_moe(taps)
-                    for l in range(min(self.cutoff + 1, self.store.num_layers)):
-                        keys = self.predictor.predict_layer(l, tap_stack[l])
-                        # see moe-infinity note: predictions substitute for
-                        # LRU touches while the sync-free fast path is armed
+        emitted_total = 1
+        try:
+            yield [int(cur[0, 0])]
+            while emitted_total < max_new_tokens:
+                # MoE-Infinity: request-level historical prefetch, all layers
+                if self.policy == "moe-infinity":
+                    hist = self._readback(self.history_dev)
+                    for l in range(self.store.num_layers):
+                        top = np.argsort(-hist[l])[: self.k]
+                        keys = [(l, int(e)) for e in top]
+                        # while the fast verify path is armed it never
+                        # touches the LRU itself (that would need a device
+                        # readback), so predicted-hot experts carry the
+                        # recency signal instead
                         _, miss = self.cache.lookup(keys, touch=self._fast_ok)
                         if miss:
                             self.prefetcher.submit(miss)
-            # ---- verification ----
-            block = jnp.concatenate(
-                [cur, jnp.asarray([drafts], jnp.int32)], axis=1)
-            tlogits, tcache = self._verify_block(block, pos, tcache)
-            greedy = self._readback(jnp.argmax(tlogits, -1))[0]  # accept sync
-            d = np.asarray(drafts)
-            match = d == greedy[:N]
-            n_acc = int(np.cumprod(match.astype(np.int64)).sum())
-            emitted = [int(t) for t in d[:n_acc]] + [int(greedy[n_acc])]
-            out.extend(emitted)
-            cur = jnp.asarray([[int(greedy[n_acc])]], jnp.int32)
-            pos += n_acc + 1
-            iters += 1
-            accepted += n_acc
-        self.prefetcher.drain()
+                # ---- drafting stage (+ SP-MoE speculative prefetching) ----
+                drafts = []
+                tok = cur
+                for i in range(N):
+                    lg, dcache, taps = self._draft_step(
+                        self.dparams, dcache, tok, jnp.int32(pos + i))
+                    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                    drafts.append(int(tok[0, 0]))
+                    if self.policy == "spmoe" and self.cutoff >= 0:
+                        tap_stack = self._draft_taps_for_moe(taps)
+                        for l in range(min(self.cutoff + 1,
+                                           self.store.num_layers)):
+                            keys = self.predictor.predict_layer(l, tap_stack[l])
+                            # see moe-infinity note: predictions substitute
+                            # for LRU touches while the fast path is armed
+                            _, miss = self.cache.lookup(keys,
+                                                        touch=self._fast_ok)
+                            if miss:
+                                self.prefetcher.submit(miss)
+                # ---- verification ----
+                block = jnp.concatenate(
+                    [cur, jnp.asarray([drafts], jnp.int32)], axis=1)
+                tlogits, tcache = self._verify_block(block, pos, tcache)
+                greedy = self._readback(jnp.argmax(tlogits, -1))[0]  # accept
+                d = np.asarray(drafts)
+                match = d == greedy[:N]
+                n_acc = int(np.cumprod(match.astype(np.int64)).sum())
+                emitted = [int(t) for t in d[:n_acc]] + [int(greedy[n_acc])]
+                cur = jnp.asarray([[int(greedy[n_acc])]], jnp.int32)
+                pos += n_acc + 1
+                self.iterations += 1
+                self.drafted += N
+                self.accepted += n_acc
+                if adaptive:
+                    N, acc_ewma = S.adaptive_next_len(
+                        N, n_acc, acc_ewma, cfg.min_draft_len,
+                        cfg.max_draft_len, cfg.draft_ewma)
+                chunk = emitted[:max_new_tokens - emitted_total]
+                emitted_total += len(chunk)
+                yield chunk
+        finally:
+            self.prefetcher.drain()
+
+    def generate(self, prompt: jax.Array, max_new_tokens: int
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One-shot compat wrapper over ``generate_stream`` returning the
+        legacy (tokens, stats-dict) shape; stats are this call's counter
+        deltas (identical to the old cumulative dict on a fresh engine)."""
+        before = self.counters()
+        t0 = time.perf_counter()
+        out: List[int] = []
+        for chunk in self.generate_stream(prompt, max_new_tokens):
+            out.extend(chunk)
         dt = time.perf_counter() - t0
-        fast_active = (int(self._readback(self._fast_active_dev))
-                       if self.fast_blocks else 0)
-        lookups = self.layer_lookups + fast_active
-        hits = self.layer_hits + fast_active
+        after = self.counters()
+        d = {k: after[k] - before[k] for k in _COUNTER_KEYS}
         stats = {
             "wall_s": dt,
             "tpot_wall": dt / max(len(out), 1),
-            "iterations": iters,
-            "acceptance_rate": accepted / max(iters * N, 1),
-            "hit_rate": hits / max(lookups, 1),
+            "iterations": d["iterations"],
+            "acceptance_rate": d["accepted"] / max(d["drafted"], 1),
+            "hit_rate": d["hits"] / max(d["lookups"], 1),
+            "on_demand_loads": d["on_demand_loads"],
+            "prefetched": d["prefetched"],
+            "evictions": d["evictions"],
+            "prefetch_evicted_unused": d["prefetch_evicted_unused"],
+            "cutoff_layer": self.cutoff,
+            "host_syncs": d["host_syncs"],
+            "verify_blocks": d["verify_blocks"],
+            "fast_blocks": d["fast_blocks"],
+            "fast_fallbacks": d["fast_fallbacks"],
+        }
+        return jnp.asarray(out, jnp.int32), stats
+
+    def counters(self) -> Dict[str, int]:
+        """Raw cumulative counters (metrics plane).  The fast path counts
+        its hits in a device-side accumulator; reading it is a blocking
+        transfer, so the value is cached per ``fast_blocks`` generation —
+        at most one readback per request (at commit time, when new fast
+        blocks have run), zero for the pre-request snapshot.  Off the
+        decode path, hence deliberately NOT routed through ``_readback``."""
+        cached_blocks, fast_active = self._fast_active_cache
+        if self.fast_blocks != cached_blocks:
+            fast_active = (int(np.asarray(self._fast_active_dev))
+                           if self.fast_blocks else 0)
+            self._fast_active_cache = (self.fast_blocks, fast_active)
+        return {
+            "lookups": self.layer_lookups + fast_active,
+            "hits": self.layer_hits + fast_active,
             "on_demand_loads": self.on_demand_loads,
             "prefetched": self.prefetcher.loaded_count,
             "evictions": self.cache.evictions,
             "prefetch_evicted_unused": self.cache.prefetch_evicted,
-            "cutoff_layer": self.cutoff,
             "host_syncs": self.host_syncs,
             "verify_blocks": self.verify_blocks,
             "fast_blocks": self.fast_blocks,
             "fast_fallbacks": self.fast_fallbacks,
+            "iterations": self.iterations,
+            "drafted": self.drafted,
+            "accepted": self.accepted,
         }
-        return jnp.asarray(out[:max_new_tokens], jnp.int32), stats
 
     def _draft_taps_for_moe(self, taps: Dict[str, jax.Array]) -> jax.Array:
         """Map draft-layer taps onto target MoE layers (layer-to-layer
@@ -473,10 +585,11 @@ class OffloadEngine:
         self.layer_hits = self.layer_lookups = 0
         self.on_demand_loads = self.host_syncs = 0
         self.verify_blocks = self.fast_blocks = self.fast_fallbacks = 0
+        self.iterations = self.drafted = self.accepted = 0
         self._fast_active_dev = jnp.zeros((), jnp.float32)
+        self._fast_active_cache = (0, 0)
         self.cache.reset_stats()
-        self.prefetcher.loaded_count = 0
-        self.prefetcher.io_events = []
+        self.prefetcher.reset_stats()
 
     def close(self):
         self.prefetcher.stop()

@@ -84,36 +84,159 @@ def make_sd_step(draft_model, target_model, draft_len: int,
     return sd_step
 
 
-def sd_generate(draft_model, target_model, dparams, tparams,
-                prompt: jax.Array, max_new_tokens: int, draft_len: int,
-                max_seq: int) -> Tuple[jax.Array, Dict[str, float]]:
-    """Python-driven generation loop (used by tests/examples; the offload
-    runtime drives the same pieces with prefetching interleaved).
+# ---------------------------------------------------------------------------
+# streaming generators — the single implementation each decode policy runs
+# on; the legacy one-shot entry points below and core/engine.py's unified
+# Engine both drive these.  Each yields one List[int] chunk per committed
+# step/verify block (already clipped to the max_new_tokens budget) and, when
+# given a ``stats`` dict, updates "iterations"/"drafted"/"accepted" in place
+# per iteration so an early generator close still leaves consistent stats.
+# ---------------------------------------------------------------------------
 
-    prompt: [1, P] -> (tokens [<= max_new_tokens], stats).
-    """
+def _bump(stats: Optional[dict], iters=0, drafted=0, accepted=0, **extra):
+    if stats is None:
+        return
+    stats["iterations"] = stats.get("iterations", 0) + iters
+    stats["drafted"] = stats.get("drafted", 0) + drafted
+    stats["accepted"] = stats.get("accepted", 0) + accepted
+    for k, v in extra.items():
+        stats.setdefault(k, []).append(v)
+
+
+def make_greedy_step(model):
+    """Jitted single-token decode step (cache it per engine, not per call)."""
+    return jax.jit(lambda p, c, t, ps: model.decode_step(p, c, t, ps))
+
+
+def adaptive_next_len(n: int, n_accepted: int, acc_ewma: float,
+                      min_len: int, max_len: int, ewma: float
+                      ) -> Tuple[int, float]:
+    """THE acceptance-EWMA draft-length controller — shared by
+    sd_adaptive_stream and the offload engine's decode loop so the
+    sd-adaptive axis behaves identically on every offload policy.
+
+    ±1 steps keep the stale-cache overwrite invariant: the next block
+    (N_new+1 tokens from pos+n+1) must cover the previous iteration's
+    rejected writes (N_prev-n positions); N_new >= N_prev-1 suffices.
+    Returns (next_n, next_ewma)."""
+    frac = n_accepted / max(n, 1)
+    acc_ewma = (1 - ewma) * acc_ewma + ewma * frac
+    if acc_ewma > 0.8 and n < max_len:
+        n += 1
+    elif acc_ewma < 0.4 and n > min_len:
+        n -= 1
+    return n, acc_ewma
+
+
+def greedy_stream(model, params, prompt: jax.Array, max_new_tokens: int,
+                  max_seq: int, stats: Optional[dict] = None, step=None):
+    """Vanilla autoregressive greedy decoding, one token per chunk."""
+    if max_new_tokens <= 0:
+        return
+    logits, cache = model.prefill(params, prompt, max_seq)
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    pos = prompt.shape[1]
+    emitted = 1
+    yield [int(cur[0, 0])]
+    if step is None:
+        step = make_greedy_step(model)
+    while emitted < max_new_tokens:
+        lg, cache, _ = step(params, cache, cur, jnp.int32(pos))
+        cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        pos += 1
+        emitted += 1
+        _bump(stats, iters=1)
+        yield [int(cur[0, 0])]
+
+
+def sd_stream(draft_model, target_model, dparams, tparams, prompt: jax.Array,
+              max_new_tokens: int, draft_len: int, max_seq: int,
+              stats: Optional[dict] = None, step=None):
+    """Fixed-N speculative decoding, one chunk per verify block."""
     assert prompt.shape[0] == 1, "SD engine is batch-1 (paper §4.2)"
-    step = jax.jit(make_sd_step(draft_model, target_model, draft_len))
+    if max_new_tokens <= 0:
+        return
+    if step is None:
+        step = jax.jit(make_sd_step(draft_model, target_model, draft_len))
     tlog, tcache = target_model.prefill(tparams, prompt, max_seq)
     _, dcache = draft_model.prefill(dparams, prompt, max_seq)
     cur = jnp.argmax(tlog, axis=-1).astype(jnp.int32)[:, None]
     pos = prompt.shape[1]
-    out = [int(cur[0, 0])]
-    iters, accepted = 0, 0
-    while len(out) < max_new_tokens:
+    emitted = 1
+    yield [int(cur[0, 0])]
+    while emitted < max_new_tokens:
         res = step(dparams, tparams, dcache, tcache, cur, jnp.int32(pos))
         n = int(res.n_emitted)
         toks = [int(t) for t in res.tokens[:n]]
-        out.extend(toks)
         cur, pos, dcache, tcache = res.cur, int(res.pos), res.dcache, res.tcache
-        iters += 1
-        accepted += int(res.n_accepted)
+        _bump(stats, iters=1, drafted=draft_len, accepted=int(res.n_accepted))
+        chunk = toks[:max_new_tokens - emitted]
+        emitted += len(chunk)
+        yield chunk
+
+
+def sd_adaptive_stream(draft_model, target_model, dparams, tparams,
+                       prompt: jax.Array, max_new_tokens: int, max_seq: int,
+                       min_len: int = 1, max_len: int = 8, ewma: float = 0.5,
+                       stats: Optional[dict] = None, step_for=None):
+    """Acceptance-adaptive draft length (beyond-paper, see sd_generate_adaptive
+    docstring), one chunk per verify block."""
+    assert prompt.shape[0] == 1
+    if max_new_tokens <= 0:
+        return
+    if step_for is None:
+        steps = {}
+
+        def step_for(n):
+            if n not in steps:
+                steps[n] = jax.jit(make_sd_step(draft_model, target_model, n))
+            return steps[n]
+
+    tlog, tcache = target_model.prefill(tparams, prompt, max_seq)
+    _, dcache = draft_model.prefill(dparams, prompt, max_seq)
+    cur = jnp.argmax(tlog, axis=-1).astype(jnp.int32)[:, None]
+    pos = prompt.shape[1]
+    emitted = 1
+    yield [int(cur[0, 0])]
+    n = min_len
+    acc_ewma = 0.5
+    while emitted < max_new_tokens:
+        res = step_for(n)(dparams, tparams, dcache, tcache, cur, jnp.int32(pos))
+        k = int(res.n_emitted)
+        toks = [int(t) for t in res.tokens[:k]]
+        cur, pos, dcache, tcache = res.cur, int(res.pos), res.dcache, res.tcache
+        _bump(stats, iters=1, drafted=n, accepted=int(res.n_accepted),
+              draft_lens=n)
+        n, acc_ewma = adaptive_next_len(n, int(res.n_accepted), acc_ewma,
+                                        min_len, max_len, ewma)
+        chunk = toks[:max_new_tokens - emitted]
+        emitted += len(chunk)
+        yield chunk
+
+
+# ---------------------------------------------------------------------------
+# legacy one-shot entry points (kept as the internal/reference layer —
+# public callers go through core/engine.py's Engine)
+# ---------------------------------------------------------------------------
+
+def sd_generate(draft_model, target_model, dparams, tparams,
+                prompt: jax.Array, max_new_tokens: int, draft_len: int,
+                max_seq: int) -> Tuple[jax.Array, Dict[str, float]]:
+    """One-shot fixed-N SD: prompt [1, P] -> (tokens [<= max_new_tokens],
+    stats).  Thin wrapper over :func:`sd_stream`."""
+    c: Dict[str, int] = {}
+    out: list = []
+    for chunk in sd_stream(draft_model, target_model, dparams, tparams,
+                           prompt, max_new_tokens, draft_len, max_seq,
+                           stats=c):
+        out.extend(chunk)
+    iters = c.get("iterations", 0)
     stats = {
         "iterations": iters,
-        "acceptance_rate": accepted / max(iters * draft_len, 1),
+        "acceptance_rate": c.get("accepted", 0) / max(iters * draft_len, 1),
         "tokens_per_iteration": len(out) / max(iters, 1),
     }
-    return jnp.array(out[:max_new_tokens], jnp.int32), stats
+    return jnp.array(out, jnp.int32), stats
 
 
 def sd_generate_adaptive(draft_model, target_model, dparams, tparams,
@@ -128,45 +251,20 @@ def sd_generate_adaptive(draft_model, target_model, dparams, tparams,
     weight stream further (see EXPERIMENTS.md §Perf cell 1); low acceptance
     -> shorter drafts stop wasting draft compute + prefetch bandwidth.
     Lossless for any schedule (greedy acceptance is N-oblivious).
+    Thin wrapper over :func:`sd_adaptive_stream`.
     """
-    assert prompt.shape[0] == 1
-    steps = {}
-
-    def step_for(n):
-        if n not in steps:
-            steps[n] = jax.jit(make_sd_step(draft_model, target_model, n))
-        return steps[n]
-
-    tlog, tcache = target_model.prefill(tparams, prompt, max_seq)
-    _, dcache = draft_model.prefill(dparams, prompt, max_seq)
-    cur = jnp.argmax(tlog, axis=-1).astype(jnp.int32)[:, None]
-    pos = prompt.shape[1]
-    out = [int(cur[0, 0])]
-    n = min_len
-    acc_ewma = 0.5
-    iters = accepted = drafted = 0
-    lens = []
-    while len(out) < max_new_tokens:
-        res = step_for(n)(dparams, tparams, dcache, tcache, cur, jnp.int32(pos))
-        k = int(res.n_emitted)
-        out.extend(int(t) for t in res.tokens[:k])
-        cur, pos, dcache, tcache = res.cur, int(res.pos), res.dcache, res.tcache
-        frac = int(res.n_accepted) / max(n, 1)
-        acc_ewma = (1 - ewma) * acc_ewma + ewma * frac
-        accepted += int(res.n_accepted)
-        drafted += n
-        lens.append(n)
-        iters += 1
-        # ±1 steps keep the stale-cache overwrite invariant: the next block
-        # (N_new+1 tokens from pos+n+1) must cover the previous iteration's
-        # rejected writes (N_prev-n positions); N_new >= N_prev-1 suffices.
-        if acc_ewma > 0.8 and n < max_len:
-            n += 1
-        elif acc_ewma < 0.4 and n > min_len:
-            n -= 1
-    return jnp.array(out[:max_new_tokens], jnp.int32), {
+    c: Dict[str, int] = {}
+    out: list = []
+    for chunk in sd_adaptive_stream(draft_model, target_model, dparams,
+                                    tparams, prompt, max_new_tokens, max_seq,
+                                    min_len=min_len, max_len=max_len,
+                                    ewma=ewma, stats=c):
+        out.extend(chunk)
+    iters = c.get("iterations", 0)
+    lens = c.get("draft_lens", [])
+    return jnp.array(out, jnp.int32), {
         "iterations": iters,
-        "acceptance_rate": accepted / max(drafted, 1),
+        "acceptance_rate": c.get("accepted", 0) / max(c.get("drafted", 0), 1),
         "tokens_per_iteration": len(out) / max(iters, 1),
         "final_draft_len": lens[-1] if lens else min_len,
         "mean_draft_len": float(np.mean(lens)) if lens else float(min_len),
@@ -175,15 +273,9 @@ def sd_generate_adaptive(draft_model, target_model, dparams, tparams,
 
 def greedy_generate(model, params, prompt: jax.Array, max_new_tokens: int,
                     max_seq: int) -> jax.Array:
-    """Vanilla autoregressive greedy decoding (the lossless reference)."""
-    logits, cache = model.prefill(params, prompt, max_seq)
-    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    pos = prompt.shape[1]
-    out = [int(cur[0, 0])]
-    step = jax.jit(lambda p, c, t, ps: model.decode_step(p, c, t, ps))
-    while len(out) < max_new_tokens:
-        lg, cache, _ = step(params, cache, cur, jnp.int32(pos))
-        cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out.append(int(cur[0, 0]))
-        pos += 1
-    return jnp.array(out[:max_new_tokens], jnp.int32)
+    """Vanilla autoregressive greedy decoding (the lossless reference).
+    Thin wrapper over :func:`greedy_stream`."""
+    out: list = []
+    for chunk in greedy_stream(model, params, prompt, max_new_tokens, max_seq):
+        out.extend(chunk)
+    return jnp.array(out, jnp.int32)

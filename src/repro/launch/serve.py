@@ -1,20 +1,41 @@
-"""Serving driver: SP-MoE offload engine (paper mode) or plain SD serving.
+"""Serving driver for the unified request-level API (core/engine.py).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
-        --policy spmoe --tokens 32
+Policy is two-axis: ``--decode`` picks how tokens are committed (greedy |
+sd | sd-adaptive), ``--offload`` picks where expert weights live (none |
+spmoe | adapmoe | moe-infinity | on-demand).  Any combination is valid and
+lossless; offload policies require an MoE target.  The legacy single-axis
+``--policy`` flag is kept as a deprecated alias (``sd-only`` ->
+``--decode sd --offload none``, ``spmoe`` -> ``--decode sd --offload
+spmoe``, ...).
+
+One Engine serves all ``--requests`` requests, so request 2+ hits a warm
+expert cache (watch ``hit_rate`` climb).  ``--stream`` prints tokens as
+each verify block commits; ``--stop-token`` ends a request early on every
+decode x offload combination identically.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --decode sd --offload spmoe --tokens 32 --requests 2
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_config, get_draft_config
-from repro.core.runtime import OffloadEngine
-from repro.core.sd import greedy_generate, sd_generate
-from repro.models.registry import build_model
+from repro.core.engine import (DECODE_POLICIES, OFFLOAD_POLICIES, Engine,
+                               EngineConfig, Request, derive_draft_config)
+
+# legacy --policy values -> (decode, offload)
+LEGACY_POLICY = {
+    "greedy": ("greedy", "none"),
+    "sd-only": ("sd", "none"),
+    "sd-adaptive": ("sd-adaptive", "none"),
+    "spmoe": ("sd", "spmoe"),
+    "adapmoe": ("sd", "adapmoe"),
+    "moe-infinity": ("sd", "moe-infinity"),
+    "on-demand": ("sd", "on-demand"),
+}
 
 
 def reduced_pair(arch: str):
@@ -22,13 +43,8 @@ def reduced_pair(arch: str):
     draft = get_draft_config(arch)
     if draft is not None and draft.name != cfg.name:
         dcfg = draft.reduced(dtype="float32")
-    elif cfg.is_moe:
-        dcfg = dataclasses.replace(cfg, num_experts=0, num_experts_per_tok=0,
-                                   num_shared_experts=0, first_dense_layers=0,
-                                   name=cfg.name + "-draft")
     else:
-        dcfg = dataclasses.replace(cfg, num_layers=max(2, cfg.num_layers // 2),
-                                   name=cfg.name + "-draft")
+        dcfg = derive_draft_config(cfg)
     return cfg, dcfg
 
 
@@ -36,52 +52,62 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--policy", default="spmoe",
-                    choices=("spmoe", "adapmoe", "moe-infinity", "on-demand",
-                             "sd-only", "sd-adaptive", "greedy"))
+    ap.add_argument("--decode", default=None, choices=DECODE_POLICIES,
+                    help="token-commit policy (default: sd)")
+    ap.add_argument("--offload", default=None, choices=OFFLOAD_POLICIES,
+                    help="expert-weight policy (default: spmoe for MoE)")
+    ap.add_argument("--policy", default=None, choices=sorted(LEGACY_POLICY),
+                    help="DEPRECATED single-axis alias for --decode/--offload")
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=1)
     ap.add_argument("--draft-len", type=int, default=4)
     ap.add_argument("--cache-slots", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--stop-token", type=int, action="append", default=None)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as verify blocks commit")
     args = ap.parse_args()
 
+    decode, offload = args.decode, args.offload
+    if args.policy is not None:
+        if decode or offload:
+            ap.error("--policy is an alias; don't mix with --decode/--offload")
+        decode, offload = LEGACY_POLICY[args.policy]
+        print(f"# --policy {args.policy} is deprecated; use "
+              f"--decode {decode} --offload {offload}")
     cfg, dcfg = reduced_pair(args.arch)
-    target = build_model(cfg)
-    draft = build_model(dcfg)
-    tparams = target.init(jax.random.PRNGKey(0))
-    # distilled draft stand-in: same init family, different seed
-    dparams = draft.init(jax.random.PRNGKey(1))
-    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, args.prompt_len),
-                                0, cfg.vocab_size)
-    max_seq = args.prompt_len + args.tokens + args.draft_len + 8
+    if decode is None:
+        decode = "sd"
+    if offload is None:
+        offload = "spmoe" if cfg.is_moe else "none"
 
-    if args.policy == "greedy":
-        out = greedy_generate(target, tparams, prompt, args.tokens, max_seq)
-        print("tokens:", out.tolist())
-        return
-    if args.policy == "sd-only":
-        out, stats = sd_generate(draft, target, dparams, tparams, prompt,
-                                 args.tokens, args.draft_len, max_seq)
-        print("tokens:", out.tolist())
-        print("stats:", stats)
-        return
-    if args.policy == "sd-adaptive":
-        from repro.core.sd import sd_generate_adaptive
-        out, stats = sd_generate_adaptive(draft, target, dparams, tparams,
-                                          prompt, args.tokens, max_seq)
-        print("tokens:", out.tolist())
-        print("stats:", stats)
-        return
-    assert cfg.is_moe, "offload policies need an MoE target"
-    eng = OffloadEngine(cfg, dcfg, tparams, dparams,
-                        cache_slots=args.cache_slots,
-                        draft_len=args.draft_len, policy=args.policy,
-                        max_seq=max_seq)
-    out, stats = eng.generate(prompt, args.tokens)
-    eng.close()
-    print("tokens:", out.tolist())
-    for k, v in stats.items():
-        print(f"  {k}: {v}")
+    max_seq = args.prompt_len + args.tokens + max(args.draft_len, 8) + 8
+    config = EngineConfig(model=cfg, draft=dcfg, decode=decode,
+                          offload=offload, cache_slots=args.cache_slots,
+                          draft_len=args.draft_len, max_seq=max_seq)
+    prompts = [jax.random.randint(jax.random.PRNGKey(2 + i),
+                                  (1, args.prompt_len), 0, cfg.vocab_size)
+               for i in range(args.requests)]
+    with Engine(config) as eng:
+        for i, prompt in enumerate(prompts):
+            req = Request(prompt=prompt, max_new_tokens=args.tokens,
+                          stop_tokens=args.stop_token or (),
+                          request_id=f"req-{i}")
+            if args.stream:
+                print(f"[{req.request_id}] tokens:", end=" ", flush=True)
+                for tok in eng.stream(req):
+                    print(tok, end=" ", flush=True)
+                print()
+                res = eng.last_result
+            else:
+                res = eng.submit(req)
+                print(f"[{req.request_id}] tokens: {res.tokens}")
+            print(f"[{req.request_id}] finish={res.finish_reason}")
+            for k, v in sorted(res.metrics.as_dict().items()):
+                print(f"    {k}: {v}")
+        cum = eng.metrics()
+        print(f"cumulative: requests={cum.requests} tokens={cum.tokens} "
+              f"hit_rate={cum.hit_rate:.3f} tpot={cum.tpot_wall * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,5 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
 CPU device; only launch/dryrun.py fabricates 512 devices."""
-import dataclasses
-
 try:                                    # the container has no hypothesis;
     import hypothesis  # noqa: F401     # fall back to the deterministic stub
 except ModuleNotFoundError:
@@ -25,10 +23,7 @@ def reduced_f32(arch: str, **over):
 
 
 def make_draft_for(cfg):
-    """Dense (or shallow) draft config for SD tests."""
-    if cfg.is_moe:
-        return dataclasses.replace(cfg, num_experts=0, num_experts_per_tok=0,
-                                   num_shared_experts=0, first_dense_layers=0,
-                                   name=cfg.name + "-draft")
-    return dataclasses.replace(cfg, num_layers=max(2, cfg.num_layers // 2),
-                               name=cfg.name + "-draft")
+    """Dense (or shallow) draft config for SD tests — the engine's own
+    default derivation (single source of truth)."""
+    from repro.core.engine import derive_draft_config
+    return derive_draft_config(cfg)

@@ -13,10 +13,10 @@ from conftest import make_draft_for
 from repro.configs.registry import get_config
 from repro.core.cache import ExpertCache
 from repro.core.cutoff import HardwareProfile, solve_cutoff
+from repro.core.engine import Engine, EngineConfig, Request
 from repro.core.offload import HostExpertStore
 from repro.core.prefetcher import Prefetcher
 from repro.core.predictor import ExpertPredictor, strategy_entropies
-from repro.core.runtime import OffloadEngine
 from repro.core.sd import greedy_generate
 
 
@@ -103,6 +103,8 @@ def test_cutoff_satisfies_constraints(t_comp, t_draft, t_io, layers, k,
 # ---------------------------------------------------------------------------
 
 def _toy_engine(policy="spmoe", slots=6):
+    """Unified-API engine (core/engine.py); eng.runtime is the offload
+    layer underneath."""
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
     dcfg = make_draft_for(cfg)
     from repro.models.registry import build_model
@@ -110,19 +112,21 @@ def _toy_engine(policy="spmoe", slots=6):
     draft = build_model(dcfg)
     tparams = target.init(jax.random.PRNGKey(0))
     dparams = draft.init(jax.random.PRNGKey(1))
-    eng = OffloadEngine(cfg, dcfg, tparams, dparams, cache_slots=slots,
-                        draft_len=3, policy=policy, max_seq=48)
+    eng = Engine(EngineConfig(model=cfg, draft=dcfg, decode="sd",
+                              offload=policy, cache_slots=slots,
+                              draft_len=3, max_seq=48), tparams, dparams)
     return cfg, target, tparams, eng
 
 
 def test_prefetch_worker_loads_async():
     cfg, target, tparams, eng = _toy_engine()
+    rt = eng.runtime
     keys = [(0, 0), (0, 1), (1, 2)]
-    task = eng.prefetcher.submit(keys)
+    task = rt.prefetcher.submit(keys)
     task.done.wait(timeout=10)
-    assert all(eng.cache.contains(k) for k in keys)
-    assert eng.prefetcher.loaded_count == 3
-    assert eng.prefetcher.io_events == [3]      # batched: one transfer
+    assert all(rt.cache.contains(k) for k in keys)
+    assert rt.prefetcher.loaded_count == 3
+    assert rt.prefetcher.io_events == [3]       # batched: one transfer
     eng.close()
 
 
@@ -145,7 +149,8 @@ def test_offload_engine_lossless(policy):
     cfg, target, tparams, eng = _toy_engine(policy)
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, cfg.vocab_size)
     ref = greedy_generate(target, tparams, prompt, 14, 48)
-    out, stats = eng.generate(prompt, 14)
+    res = eng.submit(Request(prompt=prompt, max_new_tokens=14))
+    out, stats = res.token_array(), res.metrics
     eng.close()
     assert out.tolist() == ref.tolist()
     if policy == "spmoe":
@@ -159,8 +164,8 @@ def test_spmoe_prefetch_improves_hit_rate():
     _, _, _, e1 = _toy_engine("on-demand", slots=10)
     cfg, _, _, e2 = _toy_engine("spmoe", slots=10)
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, cfg.vocab_size)
-    _, s1 = e1.generate(prompt, 12)
-    _, s2 = e2.generate(prompt, 12)
+    s1 = e1.submit(Request(prompt=prompt, max_new_tokens=12)).metrics
+    s2 = e2.submit(Request(prompt=prompt, max_new_tokens=12)).metrics
     e1.close()
     e2.close()
     assert s2["hit_rate"] >= s1["hit_rate"]
@@ -184,7 +189,7 @@ def test_strategy_entropies_ordering():
 
 def test_predictor_matches_gate_topk():
     cfg, target, tparams, eng = _toy_engine()
-    pred = eng.predictor
+    pred = eng.runtime.predictor
     tap = jax.random.normal(jax.random.PRNGKey(3), (1, 1, cfg.d_model))
     keys = pred.predict_layer(0, tap)
     # manual: top-k of softmax(tap @ gate_0)

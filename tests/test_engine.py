@@ -1,0 +1,206 @@
+"""Unified request-level serving API (core/engine.py): decode x offload
+losslessness sweep through the single entry point, streaming vs one-shot
+equivalence, cross-request warm-cache reuse, stop tokens (honoured
+identically on every combination), per-request vs cumulative Metrics,
+init-time precompilation of the fast verify path (no retrace on the fast
+blocks), and Prefetcher.reset_stats ownership."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_draft_for
+from repro.configs.registry import get_config
+from repro.core.engine import (DECODE_POLICIES, OFFLOAD_POLICIES, Engine,
+                               EngineConfig, Request, derive_draft_config)
+from repro.core.sd import greedy_generate
+from repro.models.registry import build_model
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    """Shared reduced-mixtral target/draft params + greedy reference."""
+    cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
+    dcfg = make_draft_for(cfg)
+    target = build_model(cfg)
+    tparams = target.init(jax.random.PRNGKey(0))
+    dparams = build_model(dcfg).init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0,
+                                cfg.vocab_size)
+    ref = greedy_generate(target, tparams, prompt, 12, 64).tolist()
+    return cfg, dcfg, tparams, dparams, prompt, ref
+
+
+def _engine(ms, decode="sd", offload="spmoe", slots=8, **over):
+    cfg, dcfg, tparams, dparams, _, _ = ms
+    over.setdefault("draft_len", 3)
+    over.setdefault("max_seq", 64)
+    config = EngineConfig(model=cfg, draft=dcfg, decode=decode,
+                          offload=offload, cache_slots=slots, **over)
+    return Engine(config, tparams, dparams)
+
+
+def _ample(ms):
+    cfg = ms[0]
+    return cfg.num_moe_layers * cfg.num_experts
+
+
+# ---------------------------------------------------------------------------
+# losslessness: every decode x offload combination, one entry point
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("offload", OFFLOAD_POLICIES)
+@pytest.mark.parametrize("decode", DECODE_POLICIES)
+def test_lossless_all_decode_offload_combinations(moe_setup, decode, offload):
+    """The acceptance contract of the redesign: all 15 combinations emit the
+    token stream of target-only greedy decoding, bit-identical."""
+    _, _, _, _, prompt, ref = moe_setup
+    with _engine(moe_setup, decode=decode, offload=offload,
+                 max_draft_len=5) as eng:
+        res = eng.submit(Request(prompt=prompt, max_new_tokens=12))
+    assert res.tokens == ref, (decode, offload)
+    assert res.finish_reason == "length"
+    assert res.metrics.tokens == 12
+
+
+# ---------------------------------------------------------------------------
+# streaming sessions
+# ---------------------------------------------------------------------------
+
+def test_streaming_matches_one_shot(moe_setup):
+    """stream() yields exactly the tokens submit() returns (and both match
+    the greedy reference), on the same warm engine."""
+    _, _, _, _, prompt, ref = moe_setup
+    with _engine(moe_setup, slots=_ample(moe_setup)) as eng:
+        streamed = list(eng.stream(Request(prompt=prompt, max_new_tokens=12)))
+        assert eng.last_result.tokens == streamed
+        res = eng.submit(Request(prompt=prompt, max_new_tokens=12))
+    assert streamed == ref
+    assert res.tokens == streamed
+
+
+def test_cross_request_warm_cache_reuse(moe_setup):
+    """A long-lived engine serves request 2 against the expert cache request
+    1 warmed: the per-request hit rate must strictly improve."""
+    cfg, _, tparams, _, prompt, ref = moe_setup
+    prompt2 = jax.random.randint(jax.random.PRNGKey(7), (1, 6), 0,
+                                 cfg.vocab_size)
+    with _engine(moe_setup, slots=_ample(moe_setup)) as eng:
+        r1 = eng.submit(Request(prompt=prompt, max_new_tokens=12))
+        r2 = eng.submit(Request(prompt=prompt2, max_new_tokens=12))
+        cum = eng.metrics()
+    assert r1.tokens == ref
+    assert r2.metrics.hit_rate > r1.metrics.hit_rate
+    assert r2.metrics.on_demand_loads == 0       # fully cache-resident
+    # cumulative view = sum of the per-request snapshots
+    assert cum.requests == 2
+    assert cum.tokens == r1.metrics.tokens + r2.metrics.tokens
+    assert cum.hits == r1.metrics.hits + r2.metrics.hits
+
+
+# ---------------------------------------------------------------------------
+# stop tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("decode,offload", [
+    ("greedy", "none"), ("sd", "none"), ("sd-adaptive", "none"),
+    ("sd", "spmoe"), ("greedy", "on-demand"), ("sd-adaptive", "moe-infinity"),
+])
+def test_stop_tokens_identical_across_combinations(moe_setup, decode, offload):
+    """A stop token ends the request right after it is committed — at the
+    same position on every decode x offload combination (the committed
+    stream is identical, so truncation is too)."""
+    _, _, _, _, prompt, ref = moe_setup
+    stop = ref[4]
+    with _engine(moe_setup, decode=decode, offload=offload,
+                 max_draft_len=5) as eng:
+        res = eng.submit(Request(prompt=prompt, max_new_tokens=12,
+                                 stop_tokens=(stop,)))
+    assert res.tokens == ref[:5], (decode, offload)
+    assert res.finish_reason == "stop"
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_same_keys_on_every_path(moe_setup):
+    """The Metrics surface is path-independent: identical keys whether the
+    request ran without offload or through the full SP-MoE pipeline."""
+    _, _, _, _, prompt, _ = moe_setup
+    with _engine(moe_setup, offload="none") as e1:
+        m1 = e1.submit(Request(prompt=prompt, max_new_tokens=8)).metrics
+    with _engine(moe_setup, offload="spmoe") as e2:
+        m2 = e2.submit(Request(prompt=prompt, max_new_tokens=8)).metrics
+    assert set(m1.as_dict()) == set(m2.as_dict())
+    # no-offload path reports zeros on the offload plane, not missing keys
+    assert m1.lookups == 0 and m1.prefetched == 0 and m1.host_syncs == 0
+    assert m2.lookups > 0
+    # decode-plane counters live on both
+    assert m1.iterations > 0 and m2.iterations > 0
+    assert m1.drafted == m1.iterations * 3
+
+
+def test_engine_reset_stats_and_prefetcher_ownership(moe_setup):
+    """Engine.reset_stats goes through Prefetcher.reset_stats — no caller
+    pokes prefetcher internals — and zeroes the cumulative view."""
+    _, _, _, _, prompt, _ = moe_setup
+    with _engine(moe_setup) as eng:
+        eng.submit(Request(prompt=prompt, max_new_tokens=8))
+        pf = eng.runtime.prefetcher
+        assert pf.loaded_count > 0 and pf.io_events
+        eng.reset_stats()
+        assert pf.loaded_count == 0 and pf.io_events == []
+        assert eng.metrics().requests == 0 and eng.metrics().tokens == 0
+
+
+def test_metrics_getitem_compat(moe_setup):
+    _, _, _, _, prompt, _ = moe_setup
+    with _engine(moe_setup) as eng:
+        m = eng.submit(Request(prompt=prompt, max_new_tokens=6)).metrics
+    assert m["hit_rate"] == m.hit_rate
+    assert m["fast_blocks"] == m.fast_blocks
+    assert m["cutoff_layer"] == eng.cutoff_layer
+
+
+# ---------------------------------------------------------------------------
+# precompiled fast verify path (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_on_second_fast_block(moe_setup):
+    """Engine init pre-traces _verify_fast for the decode block shape; the
+    armed fast blocks of the first request reuse that executable — the trace
+    count stays at the single init-time trace."""
+    _, _, _, _, prompt, ref = moe_setup
+    with _engine(moe_setup, slots=_ample(moe_setup)) as eng:
+        rt = eng.runtime
+        assert rt._fast_traces == 1, "init did not pre-trace the fast path"
+        res = eng.submit(Request(prompt=prompt, max_new_tokens=12))
+        assert res.metrics.fast_blocks >= 2, "fast path never engaged"
+        assert rt._fast_traces == 1, \
+            "fast verify path retraced after engine init"
+    assert res.tokens == ref
+
+
+# ---------------------------------------------------------------------------
+# config validation / request normalization
+# ---------------------------------------------------------------------------
+
+def test_engine_config_validation(moe_setup):
+    cfg = moe_setup[0]
+    dense = derive_draft_config(cfg)          # dense sibling
+    with pytest.raises(ValueError):
+        EngineConfig(model=dense, offload="spmoe")      # offload needs MoE
+    with pytest.raises(ValueError):
+        EngineConfig(model=cfg, decode="beam")          # unknown policy
+    with pytest.raises(ValueError):
+        EngineConfig(model=cfg, decode="sd", draft_len=0)
+    c = EngineConfig(model=cfg, decode="greedy", offload="on-demand")
+    assert c.initial_draft_len == 0 and not c.needs_draft
+
+
+def test_request_prompt_normalization(moe_setup):
+    _, _, _, _, prompt, ref = moe_setup
+    as_list = [int(t) for t in np.asarray(prompt)[0]]
+    with _engine(moe_setup, decode="greedy", offload="none") as eng:
+        res = eng.submit(Request(prompt=as_list, max_new_tokens=8))
+    assert res.tokens == ref[:8]

@@ -11,6 +11,10 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gemm import moe_gemm
 from repro.kernels.ssd_scan import ssd_scan
 
+# interpret-mode Pallas sweeps dominate full-suite wall time; the fast tier
+# (pytest -m "not slow") skips them — see pytest.ini
+pytestmark = pytest.mark.slow
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

@@ -125,6 +125,7 @@ def test_multi_token_verification_block(arch):
                                atol=5e-3, rtol=1e-2)
 
 
+@pytest.mark.slow      # ~30 s rolling-cache soak
 def test_swa_rolling_cache_long_decode():
     """Sliding-window ring cache: decoding past the window stays correct."""
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32", sliding_window=8)

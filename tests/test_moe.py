@@ -48,6 +48,7 @@ def test_global_path_is_dropless_under_skew():
                                rtol=1e-4)
 
 
+@pytest.mark.slow      # ~20 s dispatch property soak
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 16), st.integers(1, 4),
        st.integers(2, 32))

@@ -14,9 +14,9 @@ import pytest
 from conftest import make_draft_for
 from repro.configs.registry import get_config
 from repro.core.cache import ExpertCache
+from repro.core.engine import Engine, EngineConfig, Request
 from repro.core.offload import HostExpertStore
 from repro.core.prefetcher import Prefetcher
-from repro.core.runtime import OffloadEngine
 from repro.core.sd import greedy_generate
 from repro.kernels import ref as R
 from repro.kernels.cache_moe import _capacity, cache_moe, dispatch_to_slots
@@ -31,6 +31,7 @@ def _tol(dtype):
     return 2e-2 if jnp.dtype(dtype) == jnp.bfloat16 else 2e-5
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("T,k,S,d,f", [
     (5, 2, 6, 32, 64),        # verify-block shaped
     (1, 2, 4, 16, 32),        # single token
@@ -53,6 +54,7 @@ def test_cache_moe_parity_swiglu(T, k, S, d, f, dtype):
                                atol=_tol(dtype), rtol=2e-2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_cache_moe_parity_gelu(dtype):
     """No-wg (gelu up-projection) variant."""
@@ -70,6 +72,7 @@ def test_cache_moe_parity_gelu(dtype):
                                atol=_tol(dtype), rtol=2e-2)
 
 
+@pytest.mark.slow
 def test_cache_moe_masked_and_zero_weight_choices():
     """slot < 0 and weight == 0 choices contribute exactly zero; duplicate
     slots for one token accumulate."""
@@ -209,40 +212,47 @@ def test_table_array_consistent_under_concurrent_prefetch():
 # ≤2 host syncs per verify block (fast path) + losslessness
 # ---------------------------------------------------------------------------
 
-def _toy_engine(policy="spmoe", slots=6, draft_len=3):
+def _toy_engine(policy="spmoe", slots=6, draft_len=3, precompile=True):
+    """Unified-API engine; ``eng.runtime`` is the OffloadEngine underneath
+    (the hot-path internals these tests spy on)."""
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
     dcfg = make_draft_for(cfg)
     target = build_model(cfg)
     draft = build_model(dcfg)
     tparams = target.init(jax.random.PRNGKey(0))
     dparams = draft.init(jax.random.PRNGKey(1))
-    eng = OffloadEngine(cfg, dcfg, tparams, dparams, cache_slots=slots,
-                        draft_len=draft_len, policy=policy, max_seq=64)
+    eng = Engine(EngineConfig(model=cfg, draft=dcfg, decode="sd",
+                              offload=policy, cache_slots=slots,
+                              draft_len=draft_len, max_seq=64,
+                              precompile=precompile),
+                 tparams, dparams)
     return cfg, target, tparams, eng
 
 
 def test_fast_path_two_syncs_per_block_and_lossless():
     """With an ample cache the verify fast path arms; each fast verify block
     performs exactly ONE host sync inside _verify_block (the all_hit scalar)
-    — with the accept/reject readback in generate that is the ≤2 contract —
-    and the output still exactly matches plain greedy decoding."""
+    — with the accept/reject readback in the decode loop that is the ≤2
+    contract — and the output still exactly matches plain greedy decoding."""
     cfg, target, tparams, eng = _toy_engine(
         slots=eng_slots_all(), draft_len=3)
+    rt = eng.runtime
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0,
                                 cfg.vocab_size)
     per_block = []
-    orig_vb = eng._verify_block
+    orig_vb = rt._verify_block
 
     def spy_vb(tokens, pos, tcache):
-        before_sync, before_fast = eng.host_syncs, eng.fast_blocks
+        before_sync, before_fast = rt.host_syncs, rt.fast_blocks
         result = orig_vb(tokens, pos, tcache)
-        per_block.append((eng.host_syncs - before_sync,
-                          eng.fast_blocks > before_fast))
+        per_block.append((rt.host_syncs - before_sync,
+                          rt.fast_blocks > before_fast))
         return result
 
-    eng._verify_block = spy_vb
+    rt._verify_block = spy_vb
     ref = greedy_generate(target, tparams, prompt, 16, 64)
-    out, stats = eng.generate(prompt, 16)
+    res = eng.submit(Request(prompt=prompt, max_new_tokens=16))
+    out, stats = res.token_array(), res.metrics
     eng.close()
     assert out.tolist() == ref.tolist()
     fast = [s for s, is_fast in per_block if is_fast]
@@ -265,7 +275,8 @@ def test_fast_path_fallback_is_lossless_when_cache_too_small():
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0,
                                 cfg.vocab_size)
     ref = greedy_generate(target, tparams, prompt, 12, 64)
-    out, stats = eng.generate(prompt, 12)
+    res = eng.submit(Request(prompt=prompt, max_new_tokens=12))
+    out, stats = res.token_array(), res.metrics
     eng.close()
     assert out.tolist() == ref.tolist()
     assert stats["on_demand_loads"] > 0      # the tight cache did miss
@@ -274,18 +285,22 @@ def test_fast_path_fallback_is_lossless_when_cache_too_small():
 def test_hot_path_never_reads_resident_expert_weights():
     """The verify paths must read expert weights only from the cache slot
     buffers: zeroing the resident copies after engine construction must not
-    change the output."""
-    cfg, target, tparams, eng = _toy_engine(slots=eng_slots_all())
+    change the output.  precompile=False so the fast path is traced AFTER
+    the zeroing — an init-time trace would bake the real weights in as
+    constants and mask exactly the regression this test exists to catch."""
+    cfg, target, tparams, eng = _toy_engine(slots=eng_slots_all(),
+                                            precompile=False)
+    rt = eng.runtime
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0,
                                 cfg.vocab_size)
     ref = greedy_generate(target, tparams, prompt, 10, 64)
     # wipe the device-resident expert tensors (store already copied them)
-    for n in eng.store.names:
-        eng.tparams["layers"]["moe"][n] = \
-            jnp.zeros_like(eng.tparams["layers"]["moe"][n])
-    out, _ = eng.generate(prompt, 10)
+    for n in rt.store.names:
+        rt.tparams["layers"]["moe"][n] = \
+            jnp.zeros_like(rt.tparams["layers"]["moe"][n])
+    res = eng.submit(Request(prompt=prompt, max_new_tokens=10))
     eng.close()
-    assert out.tolist() == ref.tolist()
+    assert res.tokens == ref.tolist()
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,7 @@ def test_sd_lossless(arch, draft_len):
     assert out.tolist() == ref.tolist(), stats
 
 
+@pytest.mark.slow          # ~40 s property soak; test_sd_lossless covers API
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 10_000), st.integers(1, 6))
 def test_sd_lossless_property(seed, draft_len):

@@ -11,7 +11,7 @@ import pytest
 from conftest import make_draft_for
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.configs.registry import get_config
-from repro.core.runtime import OffloadEngine
+from repro.core.engine import Engine, EngineConfig, Request
 from repro.core.sd import greedy_generate
 from repro.launch.train import Trainer
 from repro.models.registry import build_model
@@ -35,6 +35,7 @@ def test_training_loss_decreases():
     assert last < first - 0.1, (first, last)
 
 
+@pytest.mark.slow      # training soaks: tier-1 only, not API signal
 def test_checkpoint_restart_resumes_identically():
     """Train 10 straight vs train 5 + restart + 5: identical params (data
     pipeline is restart-stable, checkpoint is exact)."""
@@ -52,12 +53,14 @@ def test_checkpoint_restart_resumes_identically():
                                    np.asarray(b, np.float32), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_training_with_grad_compression_converges():
     tr, _ = _tiny_trainer(grad_compress=True)
     _, losses = tr.train(25, log_every=0)
     assert np.mean(losses[-5:]) < np.mean(losses[:5])
 
 
+@pytest.mark.slow
 def test_supervised_training_with_failure_and_restart():
     """Injected failure mid-run; restart restores from checkpoint and
     completes the remaining steps."""
@@ -73,21 +76,21 @@ def test_supervised_training_with_failure_and_restart():
 
 
 def test_spmoe_serving_end_to_end():
-    """Full paper pipeline on a reduced mixtral: draft -> predict -> prefetch
-    -> cached verification; lossless output + prefetching active."""
+    """Full paper pipeline on a reduced mixtral through the unified request
+    API: draft -> predict -> prefetch -> cached verification; lossless
+    output + prefetching active."""
     cfg = get_config("mixtral-8x7b").reduced(dtype="float32")
     dcfg = make_draft_for(cfg)
     target = build_model(cfg)
-    draft = build_model(dcfg)
     tparams = target.init(jax.random.PRNGKey(0))
-    dparams = draft.init(jax.random.PRNGKey(1))
     prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size)
     ref = greedy_generate(target, tparams, prompt, 16, 64)
-    eng = OffloadEngine(cfg, dcfg, tparams, dparams, cache_slots=8,
-                        draft_len=4, policy="spmoe", max_seq=64)
-    out, stats = eng.generate(prompt, 16)
-    eng.close()
-    assert out.tolist() == ref.tolist()
+    config = EngineConfig(model=cfg, draft=dcfg, decode="sd", offload="spmoe",
+                          cache_slots=8, draft_len=4, max_seq=64)
+    with Engine(config, tparams) as eng:
+        res = eng.submit(Request(prompt=prompt, max_new_tokens=16))
+    assert res.tokens == ref.tolist()
+    stats = res.metrics
     assert stats["prefetched"] > 0
     assert 0 <= stats["hit_rate"] <= 1
     assert stats["cutoff_layer"] >= 0
