@@ -1,0 +1,19 @@
+# Entry points the CI workflow and humans share.  PYTHONPATH=src is the
+# repo convention (no package install step; the container already has jax).
+
+.PHONY: test test-fast test-engine bench-offload bench-sessions
+
+test:            ## tier-1 verify: the FULL suite (~13 min on the container)
+	PYTHONPATH=src python -m pytest -x -q
+
+test-fast:       ## CI tier: skips slow kernel sweeps + soaks (~8 min)
+	PYTHONPATH=src python -m pytest -x -q -m "not slow"
+
+test-engine:     ## pure serving-API signal (~3 min)
+	PYTHONPATH=src python -m pytest -x -q tests/test_engine.py tests/test_sessions.py
+
+bench-offload:   ## verification hot-path micro-bench -> BENCH_offload.json
+	PYTHONPATH=src python -m benchmarks.run --mode offload
+
+bench-sessions:  ## serial vs concurrent sessions -> BENCH_sessions.json
+	PYTHONPATH=src python -m benchmarks.run --mode sessions

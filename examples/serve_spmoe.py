@@ -3,9 +3,13 @@ paper's frameworks) on the same reduced MoE model + prompt set through the
 unified request API (one Engine per policy serving all requests against a
 warm expert cache), reporting per-policy hit rate / prefetch / eviction
 stats and validating that every policy emits the identical (lossless)
-token stream.
+token stream.  With ``--concurrency > 1`` the requests are decoded
+concurrently — the round-robin session scheduler interleaves one verify
+block per session per turn on the shared cache, and the losslessness
+column must stay True.
 
     PYTHONPATH=src python examples/serve_spmoe.py [--arch deepseek-v2-lite-16b]
+    PYTHONPATH=src python examples/serve_spmoe.py --requests 3 --concurrency 3
 """
 import argparse
 
@@ -26,6 +30,9 @@ def main():
     ap.add_argument("--tokens", type=int, default=20)
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--cache-slots", type=int, default=8)
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="sessions decoded concurrently per engine "
+                         "(round-robin on the shared cache; 1 = serial)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced(dtype="float32")
@@ -48,10 +55,13 @@ def main():
                               offload=policy, cache_slots=args.cache_slots,
                               draft_len=4, max_seq=64)
         with Engine(config, tparams, dparams) as eng:
-            ok = True
-            for p, ref in zip(prompts, refs):
-                res = eng.submit(Request(prompt=p, max_new_tokens=args.tokens))
-                ok &= res.tokens == ref
+            reqs = [Request(prompt=p, max_new_tokens=args.tokens)
+                    for p in prompts]
+            if args.concurrency > 1:
+                results = eng.serve_all(reqs, concurrency=args.concurrency)
+            else:
+                results = [eng.submit(r) for r in reqs]
+            ok = all(res.tokens == ref for res, ref in zip(results, refs))
             m = eng.metrics()    # cumulative across the request stream
         print(f"{policy:14s} {str(ok):9s} {m.hit_rate:9.2%} "
               f"{m.prefetched:<11d} {m.on_demand_loads:<10d} "

@@ -26,17 +26,23 @@ Request lifecycle
 -----------------
 A long-lived :class:`Engine` serves a stream of :class:`Request` objects
 against ONE warm :class:`~repro.core.cache.ExpertCache`, one prefetcher and
-one set of compiled step functions; only the KV/session state is
-per-request.  ``submit`` is the one-shot call; ``stream`` yields token ids
-as each verify block commits (granularity: one chunk per committed block,
-one token per step for greedy).  ``stop_tokens`` end a request early —
-truncation happens on the committed stream, so it is honoured identically
-by every decode × offload combination.
+one set of compiled step functions; everything a single request mutates
+lives in a :class:`Session`.  ``submit`` is the one-shot call; ``stream``
+yields token ids as each verify block commits (granularity: one chunk per
+committed block, one token per step for greedy); ``serve`` round-robins up
+to N concurrent sessions over the same warm runtime, one committed verify
+block per session per turn — interleaving is lossless, every session's
+stream is bit-identical to serving it alone.  ``stop_tokens`` end a request
+early — truncation happens on the committed stream, so it is honoured
+identically by every decode × offload combination — and a consumer that
+abandons ``stream``/``serve`` mid-flight retires the session with
+``finish_reason="aborted"``, leaving the engine warm and reusable.
 
 Each finished request returns a :class:`GenerationResult` carrying a
 per-request :class:`Metrics` snapshot (counter deltas for exactly that
-request); ``Engine.metrics()`` is the cumulative view.  The keys are the
-same on every path — paths that don't exercise a counter report zero.
+request, accrued turn-by-turn so interleaved sessions stay isolated);
+``Engine.metrics()`` is the cumulative view.  The keys are the same on
+every path — paths that don't exercise a counter report zero.
 """
 from __future__ import annotations
 
@@ -228,8 +234,9 @@ class Metrics:
         for f in _COUNTERS:
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.wall_s += other.wall_s
-        self.cutoff_layer = other.cutoff_layer
-        return self
+        if other.cutoff_layer >= 0:      # -1 = "no offload plane": adding a
+            self.cutoff_layer = other.cutoff_layer  # default-constructed
+        return self                      # Metrics must not wipe the echo
 
     def as_dict(self) -> Dict[str, float]:
         d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
@@ -245,7 +252,8 @@ class Metrics:
 @dataclass
 class GenerationResult:
     """Outcome of one request: the committed tokens, why generation stopped
-    (``"length"`` or ``"stop"``), and that request's Metrics delta."""
+    (``"length"``, ``"stop"``, or ``"aborted"`` when the consumer abandoned
+    the stream), and that request's Metrics delta."""
     tokens: List[int]
     finish_reason: str
     metrics: Metrics
@@ -255,8 +263,110 @@ class GenerationResult:
         return jnp.asarray(self.tokens, jnp.int32)
 
 
-class _StopHit(Exception):
-    """Internal: a stop token committed mid-chunk."""
+class Session:
+    """One in-flight request on a (possibly shared) :class:`Engine`.
+
+    Owns the per-request plane: the committed-chunk generator — whose frame
+    holds the KV/draft/decode state, lazily started on the first ``turn`` so
+    admission order is scheduler-controlled — the emitted-token buffer, the
+    finish reason, the wall clock, and a counter-delta LEDGER.  The ledger
+    accrues per-turn deltas of the engine-global cumulative counters; a
+    single before/after snapshot (how PR 3's serial ``stream`` computed
+    per-request metrics) would charge one session with every other session's
+    interleaved blocks, so deltas are taken around each generator step
+    instead — this is what keeps the per-request Metrics contract intact
+    under interleaving.
+
+    Scheduling protocol: call :meth:`turn` repeatedly; each call commits at
+    most one verify block (decode-policy-aware — greedy turns commit one
+    token, sd/sd-adaptive turns one draft-then-verify block) and returns the
+    newly committed tokens, or None once the session is done.  A stop token
+    finishes the session mid-chunk; :meth:`abort` retires an abandoned
+    session with ``finish_reason="aborted"`` while leaving the engine warm
+    and reusable.
+    """
+
+    def __init__(self, engine: "Engine", request: Request):
+        assert not engine._closed, "engine is closed"
+        self.engine = engine
+        self.request = request
+        prompt = request.prompt_array()
+        need = prompt.shape[1] + request.max_new_tokens + \
+            engine._max_block_len() + 1
+        assert need <= engine.config.max_seq, (
+            f"request needs {need} positions but max_seq is "
+            f"{engine.config.max_seq}; raise EngineConfig.max_seq")
+        self._stop = set(int(t) for t in request.stop_tokens)
+        self.sstats: Dict[str, Any] = {"iterations": 0, "drafted": 0,
+                                       "accepted": 0}
+        self.gen = engine._chunk_stream(prompt, request.max_new_tokens,
+                                        self.sstats)
+        self.ledger: Dict[str, int] = {k: 0 for k in RUNTIME_COUNTER_KEYS}
+        self.emitted: List[int] = []
+        self.wall = 0.0                 # decode-side time, not consumer time
+        self.result: Optional[GenerationResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def _step(self, fn):
+        """Run one decode-side step under this session's wall clock and
+        counter ledger (per-turn engine-counter deltas)."""
+        before = self.engine._counters()
+        t0 = time.perf_counter()
+        try:
+            return fn()
+        finally:
+            self.wall += time.perf_counter() - t0
+            after = self.engine._counters()
+            for k in self.ledger:
+                self.ledger[k] += after.get(k, 0) - before.get(k, 0)
+
+    def turn(self) -> Optional[List[int]]:
+        """Advance one committed verify block.  Returns the newly committed
+        tokens (truncated right after a stop token) or None when done."""
+        if self.done:
+            return None
+        try:
+            chunk = self._step(lambda: next(self.gen))
+        except StopIteration:
+            self._finalize("length")
+            return None
+        out: List[int] = []
+        for tok in chunk:
+            tok = int(tok)
+            self.emitted.append(tok)
+            out.append(tok)
+            if tok in self._stop:
+                self._finalize("stop")
+                break
+        return out
+
+    def abort(self):
+        """Retire an unfinished session as ``"aborted"`` (no-op when already
+        finished): the decode generator is closed — which waits out this
+        session's prefetch tasks and commits its counters — so the engine
+        stays warm and immediately reusable."""
+        if not self.done:
+            self._finalize("aborted")
+
+    def _finalize(self, finish: str):
+        self._step(self.gen.close)    # offload path retires its DecodeState
+        m = Metrics(requests=1, tokens=len(self.emitted), wall_s=self.wall,
+                    cutoff_layer=self.engine.cutoff_layer)
+        if self.engine.runtime is not None:
+            for k, v in self.ledger.items():
+                setattr(m, k, v)
+        else:
+            m.iterations = self.sstats["iterations"]
+            m.drafted = self.sstats["drafted"]
+            m.accepted = self.sstats["accepted"]
+        self.result = GenerationResult(tokens=list(self.emitted),
+                                       finish_reason=finish, metrics=m,
+                                       request_id=self.request.request_id)
+        self.engine._cum.add(m)
+        self.engine.last_result = self.result
 
 
 class Engine:
@@ -292,6 +402,7 @@ class Engine:
         self._greedy_step = None
         self._cum = Metrics(cutoff_layer=self.cutoff_layer)
         self.last_result: Optional[GenerationResult] = None
+        self.last_batch: List[GenerationResult] = []
         self._closed = False
 
     # ----------------------------------------------------------- properties
@@ -302,53 +413,82 @@ class Engine:
     # ------------------------------------------------------------- serving
     def submit(self, request: Request) -> GenerationResult:
         """One-shot: run the request to completion, return the result."""
-        for _ in self.stream(request):
+        session = Session(self, request)
+        while session.turn() is not None:
             pass
-        return self.last_result
+        return session.result
 
     def stream(self, request: Request) -> Iterator[int]:
         """Yield token ids as each verify block commits.  After exhaustion
-        the request's :class:`GenerationResult` is at ``self.last_result``."""
-        assert not self._closed, "engine is closed"
-        prompt = request.prompt_array()
-        need = prompt.shape[1] + request.max_new_tokens + \
-            self._max_block_len() + 1
-        assert need <= self.config.max_seq, (
-            f"request needs {need} positions but max_seq is "
-            f"{self.config.max_seq}; raise EngineConfig.max_seq")
-        stop = set(int(t) for t in request.stop_tokens)
-        before = self._counters()
-        sstats: Dict[str, Any] = {"iterations": 0, "drafted": 0, "accepted": 0}
-        gen = self._chunk_stream(prompt, request.max_new_tokens, sstats)
-        emitted: List[int] = []
-        finish = "length"
-        # wall_s accumulates only time spent INSIDE the chunk generator (the
-        # decode work), not consumer time between yields — so streamed and
-        # one-shot requests report comparable per-request latency.
-        wall = 0.0
+        the request's :class:`GenerationResult` is at ``self.last_result``.
+        If the consumer abandons the generator mid-stream the request is
+        retired with ``finish_reason="aborted"`` and the engine stays warm
+        and reusable.  wall_s accumulates only decode-side time (inside the
+        chunk generator), not consumer time between yields — so streamed
+        and one-shot requests report comparable per-request latency."""
+        session = Session(self, request)
         try:
             while True:
-                t0 = time.perf_counter()
-                try:
-                    chunk = next(gen)
-                except StopIteration:
-                    wall += time.perf_counter() - t0
+                chunk = session.turn()
+                if chunk is None:
                     break
-                wall += time.perf_counter() - t0
                 for tok in chunk:
-                    emitted.append(int(tok))
-                    yield int(tok)
-                    if int(tok) in stop:
-                        finish = "stop"
-                        raise _StopHit
-        except _StopHit:
-            pass
+                    yield tok
+                if session.done:       # stop token committed mid-chunk
+                    break
         finally:
-            t0 = time.perf_counter()
-            gen.close()               # offload path drains the prefetcher
-            wall += time.perf_counter() - t0
-            self.last_result = self._finish(request, emitted, finish, wall,
-                                            before, sstats)
+            session.abort()            # no-op unless abandoned mid-stream
+
+    def serve(self, requests: Sequence[Request], *, concurrency: int = 2
+              ) -> Iterator[Tuple[str, int]]:
+        """Round-robin scheduler: up to ``concurrency`` sessions at a time
+        interleave ONE committed verify block per turn on the single warm
+        ExpertCache / Prefetcher / compiled-step set; further requests are
+        admitted as sessions finish.  Turns are decode-policy-aware by
+        construction — greedy turns commit 1 token, sd / sd-adaptive turns
+        one draft-then-verify block of that session's current draft length.
+
+        Yields ``(request_id, token)`` pairs in commit order (request_id
+        falls back to ``"req-<index>"``).  ``self.last_batch`` is reset to
+        ``[]`` on this call and holds the per-request
+        :class:`GenerationResult` list (submission order) once the iterator
+        finishes — including early ``close()`` after the first ``next()``,
+        which aborts unfinished sessions; a never-started iterator leaves
+        it ``[]``, never a previous batch's results.  Interleaving is
+        lossless: each session's token stream is bit-identical to serving
+        its request alone (tests/test_sessions.py)."""
+        assert concurrency >= 1
+        sessions = [Session(self, r) for r in requests]
+        names = [s.request.request_id or f"req-{i}"
+                 for i, s in enumerate(sessions)]
+        self.last_batch = []
+        return self._serve_iter(names, sessions, concurrency)
+
+    def _serve_iter(self, names: List[str], sessions: List["Session"],
+                    concurrency: int) -> Iterator[Tuple[str, int]]:
+        try:
+            waiting = list(zip(names, sessions))
+            active: List[Tuple[str, Session]] = []
+            while active or waiting:
+                while waiting and len(active) < concurrency:
+                    active.append(waiting.pop(0))
+                for name, s in list(active):
+                    chunk = s.turn()
+                    if s.done:
+                        active.remove((name, s))
+                    for tok in chunk or ():
+                        yield name, tok
+        finally:
+            for s in sessions:
+                s.abort()              # no-op on finished sessions
+            self.last_batch = [s.result for s in sessions]
+
+    def serve_all(self, requests: Sequence[Request], *, concurrency: int = 2
+                  ) -> List[GenerationResult]:
+        """Drain :meth:`serve`; returns the results in request order."""
+        for _ in self.serve(requests, concurrency=concurrency):
+            pass
+        return self.last_batch
 
     def metrics(self) -> Metrics:
         """Cumulative Metrics across every request this engine served."""
@@ -410,20 +550,7 @@ class Engine:
         return self._sd_steps[n]
 
     def _counters(self) -> Dict[str, int]:
+        """Host-only snapshot of the runtime's cumulative counters (empty
+        without an offload plane) — cheap enough that Session ledgers take
+        it around every turn."""
         return self.runtime.counters() if self.runtime is not None else {}
-
-    def _finish(self, request, emitted, finish, wall, before, sstats
-                ) -> GenerationResult:
-        after = self._counters()
-        m = Metrics(requests=1, tokens=len(emitted), wall_s=wall,
-                    cutoff_layer=self.cutoff_layer)
-        if after:
-            for k in RUNTIME_COUNTER_KEYS:
-                setattr(m, k, after[k] - before.get(k, 0))
-        else:
-            m.iterations = sstats["iterations"]
-            m.drafted = sstats["drafted"]
-            m.accepted = sstats["accepted"]
-        self._cum.add(m)
-        return GenerationResult(tokens=emitted, finish_reason=finish,
-                                metrics=m, request_id=request.request_id)

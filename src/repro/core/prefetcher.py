@@ -71,6 +71,12 @@ class Prefetcher:
         if self.mode == "vanilla":
             self._execute(task)            # synchronous: blocks the producer
             task.done.set()
+        elif self._thread is None or not self._thread.is_alive():
+            # submit after stop() (or with a dead worker): enqueueing would
+            # bump _inflight with nothing left to decrement it, hanging
+            # drain() forever — degrade to synchronous execution instead
+            self._execute(task)
+            task.done.set()
         else:
             with self._cv:
                 self._inflight += 1

@@ -53,22 +53,33 @@ Baseline policies (for the paper's comparisons) plug into the same loop:
 Host-sync accounting: every blocking device->host readback on the DECODE
 path goes through ``_readback`` (a test hook — tests/test_offload_hotpath.py
 spies on it to enforce the ≤2-syncs-per-block contract) and is counted in
-the ``host_syncs`` counter.  Metrics-plane readbacks (the ``counters()``
-snapshot of the device-side fast-path hit accumulator, taken once per
-request at commit time) sit outside the decode loop and are intentionally
-not counted.
+the ``host_syncs`` counter.  Metrics-plane readbacks (each session's
+device-side fast-hit accumulator, committed by ``finish_session`` once at
+retirement) sit outside the decode loop and are intentionally not counted.
 
 This engine is the *internal* offload layer: construct it from an
 ``EngineConfig`` (core/engine.py) — the public request/stream API is
-``repro.core.engine.Engine``, which owns one OffloadEngine for the session
-and serves many requests against its warm cache.  The decode axis
-(greedy | sd | sd-adaptive) is honoured here too: greedy runs 1-token
-verify blocks with no drafting stage (note SP-MoE's prefetch signal IS the
-drafting stage, so ``greedy × spmoe`` degenerates to on-demand loading),
-sd-adaptive drives the same EWMA draft-length controller as core/sd.py.
+``repro.core.engine.Engine``, which owns one OffloadEngine and serves many
+requests against its warm cache.  The decode axis (greedy | sd |
+sd-adaptive) is honoured here too: greedy runs 1-token verify blocks with
+no drafting stage (note SP-MoE's prefetch signal IS the drafting stage, so
+``greedy × spmoe`` degenerates to on-demand loading), sd-adaptive drives
+the same EWMA draft-length controller as core/sd.py.
+
+State is split into two planes so sessions can interleave on one warm
+cache: everything a single request mutates lives in a :class:`DecodeState`
+(KV/draft caches, position, draft-length controller, request-level
+MoE-Infinity history, fast-path arming, and the device-side fast-hit
+accumulator), while the engine keeps only the shared runtime (cache,
+prefetcher, compiled steps) and cumulative counters.  The turn API —
+``start_session`` / ``session_turn`` / ``finish_session`` — advances any
+session by one committed verify block at a time; ``generate_stream`` is the
+single-session wrapper, and ``Engine.serve`` (core/engine.py) is the
+round-robin multi-session scheduler on top.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
@@ -95,6 +106,42 @@ POLICIES = ("spmoe", "adapmoe", "moe-infinity", "on-demand")
 # counters() keys — single source of truth in core/engine.py (the Engine's
 # per-request delta iterates the same tuple)
 _COUNTER_KEYS = RUNTIME_COUNTER_KEYS
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """The per-session plane of the offload engine: everything exactly one
+    in-flight request mutates while decoding.  The engine-global plane (the
+    warm ExpertCache, Prefetcher, compiled step functions, cumulative
+    counters) is shared by every session; interleaving sessions block-by-
+    block is safe because ``session_turn`` re-binds this state before
+    touching any shared helper.
+
+    ``history_dev`` / ``fast_ok`` / ``fast_penalty`` / ``fast_active_dev``
+    used to live on the engine itself (PR 2/3) — request-level state that
+    silently became engine-global.  They are per-session now: one session's
+    fast-path misprediction no longer disarms another mid-block, and the
+    MoE-Infinity history really is request-level, as that baseline defines
+    it.  What stays global is the *warm hint* (`OffloadEngine._fast_hint`),
+    seeding newly admitted sessions' arming from the shared cache's observed
+    residency."""
+    max_new: int
+    tcache: Any
+    dcache: Any = None
+    cur: Optional[jax.Array] = None
+    pos: int = 0
+    n: int = 0                        # current draft length (0 = greedy)
+    acc_ewma: float = 0.5
+    emitted_total: int = 0
+    pending: Optional[List[int]] = None   # prefill chunk awaiting delivery
+    history_dev: Any = None           # MoE-Infinity request-level history
+    fast_ok: bool = False
+    fast_penalty: int = 0
+    fast_active_dev: Any = None       # device-side fast-path hit accumulator
+    fast_blocks: int = 0              # session's fast blocks (commit gate)
+    inflight: List[Any] = dataclasses.field(default_factory=list)
+    finished: bool = False
+    committed: bool = False
 
 
 class OffloadEngine:
@@ -141,12 +188,12 @@ class OffloadEngine:
                                        max(self.draft_len, 1)).cutoff_layer
         else:
             self.cutoff = self.store.num_layers - 1
-        # MoE-Infinity history counts — device-resident, updated in-graph
-        self.history_dev = jnp.zeros(
-            (self.store.num_layers, cfg.num_experts), jnp.float32)
+        # MoE-Infinity history is request-level: each DecodeState carries its
+        # own device-resident [L, E] count array of this shape.
+        self._hist_shape = (self.store.num_layers, cfg.num_experts)
         self._fast_traces = 0     # trace-time counter (retrace regression)
         self._build_jitted()
-        # stats
+        # stats (engine-global plane: cumulative across every session)
         self.layer_hits = 0
         self.layer_lookups = 0
         self.on_demand_loads = 0
@@ -157,15 +204,17 @@ class OffloadEngine:
         self.iterations = 0
         self.drafted = 0
         self.accepted = 0
-        self._fast_active_dev = jnp.zeros((), jnp.float32)
-        self._fast_active_cache = (0, 0)   # (fast_blocks at readback, value)
-        # adaptive fast-path arming: cold caches go straight to the slow
-        # (miss-resolving) path; a zero-miss slow block re-arms the fast
-        # path.  After a misprediction, _fast_penalty demands that many
-        # consecutive clean slow blocks before re-arming, bounding the
-        # worst-case evict/fallback thrash to a fraction of blocks.
-        self._fast_ok = False
-        self._fast_penalty = 0
+        # adaptive fast-path arming is per-session (DecodeState.fast_ok):
+        # cold caches go straight to the slow (miss-resolving) path; a
+        # zero-miss slow block re-arms, and after a misprediction
+        # fast_penalty demands that many consecutive clean slow blocks
+        # before re-arming.  _fast_hint is the engine-global residual: the
+        # last observed arming state of the shared cache, used only to seed
+        # NEWLY admitted sessions (so request 2 on a warm engine starts on
+        # the fast path instead of paying per-layer syncs to rediscover
+        # warmth).
+        self._fast_hint = False
+        self._st: Optional[DecodeState] = None   # state bound to this turn
         if config.precompile and self.policy != "adapmoe":
             self._precompile_fast()
 
@@ -294,17 +343,29 @@ class OffloadEngine:
             if self.draft is not None else None)
 
     def _precompile_fast(self):
-        """Trace + compile ``_verify_fast`` for the decode block shape at
-        engine init, so the first armed fast block doesn't hold the cache
-        lock across a trace (ROADMAP open item).  The dummy call's inputs
-        mirror the decode-time signature exactly — [1, N+1] int32 tokens, a
-        python-int position, the session-shaped KV cache — so the jit cache
-        entry is the one ``_verify_block`` hits (regression:
-        tests/test_engine.py::test_no_retrace_on_second_fast_block)."""
-        tokens = jnp.zeros((1, self.draft_len + 1), jnp.int32)
+        """Trace + compile ``_verify_fast`` for every decode block shape this
+        config can produce, so no armed fast block ever holds the cache lock
+        across a trace (ROADMAP open item).  ``sd`` / ``greedy`` have one
+        block shape ([1, N+1]); ``sd-adaptive`` pre-traces the whole
+        draft-length ladder [min_draft_len, max_draft_len] — previously only
+        ``min_draft_len + 1`` was compiled and every distinct adapted length
+        retraced mid-serve.  The dummy calls' inputs mirror the decode-time
+        signature exactly — int32 tokens, a python-int position, the
+        session-shaped KV cache — so the jit cache entries are the ones
+        ``_verify_block`` hits (regressions:
+        tests/test_engine.py::test_no_retrace_on_second_fast_block,
+        tests/test_sessions.py::test_adaptive_ladder_precompiled)."""
+        if self.decode == DecodePolicy.SD_ADAPTIVE.value:
+            lens = range(self.config.min_draft_len,
+                         self.config.max_draft_len + 1)
+        else:
+            lens = (self.draft_len,)
         tcache = self.target.init_cache(1, self.max_seq)
         bufs, table = self.cache.snapshot()   # init: nothing inserts yet
-        self._verify_fast(bufs, table, self.history_dev, tokens, 0, tcache)
+        hist = jnp.zeros(self._hist_shape, jnp.float32)
+        for n in lens:
+            tokens = jnp.zeros((1, n + 1), jnp.int32)
+            self._verify_fast(bufs, table, hist, tokens, 0, tcache)
 
     def _layer_params(self, l: int):
         """Per-layer param slice for the slow path — attention + norms +
@@ -330,29 +391,36 @@ class OffloadEngine:
 
     def _verify_block(self, tokens: jax.Array, pos: int, tcache):
         """Layer-wise target forward with cache-aware expert compute.
-        tokens: [1, N+1].  See module docstring for the fast/slow design."""
+        tokens: [1, N+1].  See module docstring for the fast/slow design.
+        Session state (fast-path arming, history, hit accumulator) is read
+        from ``self._st`` — bound by the turn that dispatched this block —
+        so the signature stays the sync-spy hook tests wrap."""
+        st = self._st
         self.verify_blocks += 1
-        if self._fast_ok and self.policy != "adapmoe":
+        if st.fast_ok and self.policy != "adapmoe":
             # snapshot + dispatch under the cache lock: a concurrent donating
             # insert must not delete the buffer handle mid-dispatch.
             with self.cache.lock:
                 bufs, table = self.cache.snapshot()
                 logits, ok, ncache, nhist, nact = self._verify_fast(
-                    bufs, table, self.history_dev, tokens, pos, tcache)
+                    bufs, table, st.history_dev, tokens, pos, tcache)
             if bool(self._readback(ok)):          # sync 1 of ≤2 per block
-                self.history_dev = nhist
-                self._fast_active_dev = self._fast_active_dev + nact
+                st.history_dev = nhist
+                st.fast_active_dev = st.fast_active_dev + nact
+                st.fast_blocks += 1
                 self.fast_blocks += 1
                 return logits, ncache
-            self._fast_ok = False                 # mispredicted availability
-            self._fast_penalty = 2
+            st.fast_ok = False                    # mispredicted availability
+            st.fast_penalty = 2
+            self._fast_hint = False
             self.fast_fallbacks += 1
         return self._verify_block_slow(tokens, pos, tcache)
 
     def _verify_block_slow(self, tokens: jax.Array, pos: int, tcache):
         """Miss-resolution path: per-layer loop, one routing readback per MoE
-        layer, on-demand wave loading; re-arms the fast path when the whole
-        block resolved from cache."""
+        layer, on-demand wave loading; re-arms the session's fast path when
+        the whole block resolved from cache."""
+        st = self._st
         cfg = self.cfg
         x = self._embed(tokens)
         T = tokens.shape[1]
@@ -370,15 +438,15 @@ class OffloadEngine:
             ids_np = self._readback(ids)          # miss-resolution sync
             act = np.zeros((cfg.num_experts,), np.float32)
             act[np.unique(ids_np)] = 1.0
-            self.history_dev = self._hist_add(self.history_dev, l,
-                                              jnp.asarray(act))
+            st.history_dev = self._hist_add(st.history_dev, l,
+                                            jnp.asarray(act))
             # AdapMoE baseline: predict next layer from *this* layer's gate
             # input using the target's own gates, synchronous prefetch.
             if self.policy == "adapmoe" and l + 1 < self.store.num_layers:
                 nxt = self.predictor.predict_layer(l + 1, h2[:, -1:])
                 _, miss = self.cache.lookup(nxt, touch=False)
                 if miss:
-                    self.prefetcher.submit(miss)     # vanilla mode: blocking
+                    self._prefetch(st, miss)         # vanilla mode: blocking
             hits, misses = self._ensure_loaded(l, ids_np)
             total_misses += len(misses)
             # cached-first compute (dispatches async under jax): hit experts'
@@ -414,98 +482,172 @@ class OffloadEngine:
         tcache["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
         if self.policy != "adapmoe":
             if total_misses == 0:
-                if self._fast_penalty > 0:
-                    self._fast_penalty -= 1
-                self._fast_ok = self._fast_penalty == 0
+                if st.fast_penalty > 0:
+                    st.fast_penalty -= 1
+                st.fast_ok = st.fast_penalty == 0
             else:
-                self._fast_ok = False
+                st.fast_ok = False
+            self._fast_hint = st.fast_ok   # seed arming of future sessions
         return self._head(x), tcache
+
+    # ------------------------------------------------------------ session API
+    # The turn-based serving surface: a scheduler (core/engine.py's
+    # Engine.serve round-robin, or the generate_stream wrapper below for a
+    # single session) admits a session with start_session, advances it one
+    # committed verify block at a time with session_turn, and retires it
+    # with finish_session.  All three re-bind self._st, so any number of
+    # sessions may interleave turns on the one warm cache.
+
+    def start_session(self, prompt: jax.Array, max_new_tokens: int
+                      ) -> DecodeState:
+        """Admit one request: allocate its per-session plane (KV cache,
+        draft cache, request-level history, fast-path arming seeded from the
+        engine's warm hint) and run the prefill verify block — through the
+        cache-aware path, so its expert loads warm the shared cache."""
+        assert prompt.shape[0] == 1
+        st = DecodeState(
+            max_new=max_new_tokens,
+            tcache=self.target.init_cache(1, self.max_seq),
+            n=self.draft_len,                     # 0 for greedy decode
+            history_dev=jnp.zeros(self._hist_shape, jnp.float32),
+            fast_active_dev=jnp.zeros((), jnp.float32),
+            fast_ok=self._fast_hint and self.policy != "adapmoe")
+        if max_new_tokens <= 0:
+            st.finished = True
+            return st
+        self._st = st
+        if st.n > 0:
+            _, st.dcache = self.draft.prefill(self.dparams, prompt,
+                                              self.max_seq)
+        logits, st.tcache = self._verify_block(prompt, 0, st.tcache)
+        st.cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        st.pos = prompt.shape[1]
+        st.emitted_total = 1
+        st.pending = [int(st.cur[0, 0])]
+        return st
+
+    def session_turn(self, st: DecodeState) -> Optional[List[int]]:
+        """Advance one session by ONE committed chunk; returns the chunk
+        (clipped to the max_new_tokens budget) or None once the session has
+        nothing left to emit.  The block schedule is decode-policy-aware:
+        greedy = a 1-token block with no drafting stage, sd = a fixed-N
+        draft-then-verify block, sd-adaptive = the EWMA controller of
+        core/sd.py driving this session's own draft length."""
+        if st.finished:
+            return None
+        if st.pending is not None:             # deliver the prefill token
+            chunk, st.pending = st.pending, None
+            st.finished = st.emitted_total >= st.max_new
+            return chunk
+        if st.emitted_total >= st.max_new:
+            st.finished = True
+            return None
+        self._st = st
+        cfg = self.config
+        N = st.n
+        # MoE-Infinity: request-level historical prefetch, all layers
+        if self.policy == "moe-infinity":
+            hist = self._readback(st.history_dev)
+            for l in range(self.store.num_layers):
+                top = np.argsort(-hist[l])[: self.k]
+                keys = [(l, int(e)) for e in top]
+                # while the fast verify path is armed it never touches the
+                # LRU itself (that would need a device readback), so
+                # predicted-hot experts carry the recency signal instead
+                _, miss = self.cache.lookup(keys, touch=st.fast_ok)
+                if miss:
+                    self._prefetch(st, miss)
+        # ---- drafting stage (+ SP-MoE speculative prefetching) ----
+        drafts = []
+        tok = st.cur
+        for i in range(N):
+            lg, st.dcache, taps = self._draft_step(
+                self.dparams, st.dcache, tok, jnp.int32(st.pos + i))
+            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            drafts.append(int(tok[0, 0]))
+            if self.policy == "spmoe" and self.cutoff >= 0:
+                tap_stack = self._draft_taps_for_moe(taps)
+                for l in range(min(self.cutoff + 1, self.store.num_layers)):
+                    keys = self.predictor.predict_layer(l, tap_stack[l])
+                    # see moe-infinity note: predictions substitute for LRU
+                    # touches while the fast path is armed
+                    _, miss = self.cache.lookup(keys, touch=st.fast_ok)
+                    if miss:
+                        self._prefetch(st, miss)
+        # ---- verification ----
+        block = jnp.concatenate(
+            [st.cur, jnp.asarray([drafts], jnp.int32)], axis=1) \
+            if drafts else st.cur
+        tlogits, st.tcache = self._verify_block(block, st.pos, st.tcache)
+        greedy = self._readback(jnp.argmax(tlogits, -1))[0]      # accept
+        d = np.asarray(drafts, np.int64)
+        match = d == greedy[:N]
+        n_acc = int(np.cumprod(match.astype(np.int64)).sum())
+        emitted = [int(t) for t in d[:n_acc]] + [int(greedy[n_acc])]
+        st.cur = jnp.asarray([[int(greedy[n_acc])]], jnp.int32)
+        st.pos += n_acc + 1
+        self.iterations += 1
+        self.drafted += N
+        self.accepted += n_acc
+        if self.decode == DecodePolicy.SD_ADAPTIVE.value:
+            st.n, st.acc_ewma = S.adaptive_next_len(
+                N, n_acc, st.acc_ewma, cfg.min_draft_len,
+                cfg.max_draft_len, cfg.draft_ewma)
+        chunk = emitted[:st.max_new - st.emitted_total]
+        st.emitted_total += len(chunk)
+        st.finished = st.emitted_total >= st.max_new
+        return chunk
+
+    def _prefetch(self, st: DecodeState, keys):
+        """Submit a prefetch on behalf of ``st``, remembering the task so
+        retirement waits on exactly this session's in-flight I/O."""
+        task = self.prefetcher.submit(keys)
+        if task is not None:
+            st.inflight.append(task)
+
+    def finish_session(self, st: DecodeState):
+        """Retire a session (idempotent, runs on every exit path): commit
+        its device-side fast-path hit accumulator into the cumulative
+        lookup/hit counters — the ONE metrics-plane readback per session,
+        off the decode path, hence deliberately not routed through
+        ``_readback`` — and wait out the session's OWN prefetch tasks so
+        none is in flight against a retired request's predictions.  Only
+        this session's tasks: a full ``prefetcher.drain()`` here would
+        stall still-active concurrent sessions on the shared worker at
+        every retirement boundary."""
+        if st.committed:
+            return
+        st.committed = True
+        st.finished = True
+        if st.fast_blocks:
+            fast_active = int(np.asarray(st.fast_active_dev))
+            self.layer_lookups += fast_active
+            self.layer_hits += fast_active
+        for task in st.inflight:       # worker sets done even on task error
+            task.done.wait()
+        st.inflight.clear()
+        self.cache.wait()              # dispatched H2D transfers have landed
 
     # ---------------------------------------------------------------- generate
     def generate_stream(self, prompt: jax.Array, max_new_tokens: int
                         ) -> Iterator[List[int]]:
-        """Streaming decode loop: yields one List[int] chunk per committed
-        verify block (chunks are clipped to the max_new_tokens budget).  The
-        decode axis of the EngineConfig selects the block schedule: greedy =
-        1-token blocks with no drafting, sd = fixed N, sd-adaptive = the
-        EWMA controller of core/sd.py.  Cumulative engine counters
-        (iterations/drafted/accepted/...) update per iteration, so an early
-        generator close (stop token) leaves consistent stats; the prefetcher
-        is drained on every exit path."""
-        assert prompt.shape[0] == 1
+        """Single-session streaming wrapper over the session API: yields one
+        List[int] chunk per committed verify block.  Cumulative engine
+        counters update per turn, so an early generator close (stop token,
+        abandoned consumer) leaves consistent stats; the session is retired
+        (fast-hit commit + wait on its own prefetch tasks) on every exit
+        path."""
         if max_new_tokens <= 0:
             return
-        cfg = self.config
-        N = self.draft_len          # 0 for greedy decode
-        adaptive = self.decode == DecodePolicy.SD_ADAPTIVE.value
-        acc_ewma = 0.5
-        # prefill: run target through the cache-aware path too (loads warm it)
-        dcache = None
-        if N > 0:
-            _, dcache = self.draft.prefill(self.dparams, prompt, self.max_seq)
-        tcache = self.target.init_cache(1, self.max_seq)
-        logits, tcache = self._verify_block(prompt, 0, tcache)
-        cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        pos = prompt.shape[1]
-        emitted_total = 1
+        st = self.start_session(prompt, max_new_tokens)
         try:
-            yield [int(cur[0, 0])]
-            while emitted_total < max_new_tokens:
-                # MoE-Infinity: request-level historical prefetch, all layers
-                if self.policy == "moe-infinity":
-                    hist = self._readback(self.history_dev)
-                    for l in range(self.store.num_layers):
-                        top = np.argsort(-hist[l])[: self.k]
-                        keys = [(l, int(e)) for e in top]
-                        # while the fast verify path is armed it never
-                        # touches the LRU itself (that would need a device
-                        # readback), so predicted-hot experts carry the
-                        # recency signal instead
-                        _, miss = self.cache.lookup(keys, touch=self._fast_ok)
-                        if miss:
-                            self.prefetcher.submit(miss)
-                # ---- drafting stage (+ SP-MoE speculative prefetching) ----
-                drafts = []
-                tok = cur
-                for i in range(N):
-                    lg, dcache, taps = self._draft_step(
-                        self.dparams, dcache, tok, jnp.int32(pos + i))
-                    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
-                    drafts.append(int(tok[0, 0]))
-                    if self.policy == "spmoe" and self.cutoff >= 0:
-                        tap_stack = self._draft_taps_for_moe(taps)
-                        for l in range(min(self.cutoff + 1,
-                                           self.store.num_layers)):
-                            keys = self.predictor.predict_layer(l, tap_stack[l])
-                            # see moe-infinity note: predictions substitute
-                            # for LRU touches while the fast path is armed
-                            _, miss = self.cache.lookup(keys,
-                                                        touch=self._fast_ok)
-                            if miss:
-                                self.prefetcher.submit(miss)
-                # ---- verification ----
-                block = jnp.concatenate(
-                    [cur, jnp.asarray([drafts], jnp.int32)], axis=1)
-                tlogits, tcache = self._verify_block(block, pos, tcache)
-                greedy = self._readback(jnp.argmax(tlogits, -1))[0]  # accept
-                d = np.asarray(drafts)
-                match = d == greedy[:N]
-                n_acc = int(np.cumprod(match.astype(np.int64)).sum())
-                emitted = [int(t) for t in d[:n_acc]] + [int(greedy[n_acc])]
-                cur = jnp.asarray([[int(greedy[n_acc])]], jnp.int32)
-                pos += n_acc + 1
-                self.iterations += 1
-                self.drafted += N
-                self.accepted += n_acc
-                if adaptive:
-                    N, acc_ewma = S.adaptive_next_len(
-                        N, n_acc, acc_ewma, cfg.min_draft_len,
-                        cfg.max_draft_len, cfg.draft_ewma)
-                chunk = emitted[:max_new_tokens - emitted_total]
-                emitted_total += len(chunk)
+            while True:
+                chunk = self.session_turn(st)
+                if chunk is None:
+                    return
                 yield chunk
         finally:
-            self.prefetcher.drain()
+            self.finish_session(st)
 
     def generate(self, prompt: jax.Array, max_new_tokens: int
                  ) -> Tuple[jax.Array, Dict[str, Any]]:
@@ -539,20 +681,15 @@ class OffloadEngine:
         return jnp.asarray(out, jnp.int32), stats
 
     def counters(self) -> Dict[str, int]:
-        """Raw cumulative counters (metrics plane).  The fast path counts
-        its hits in a device-side accumulator; reading it is a blocking
-        transfer, so the value is cached per ``fast_blocks`` generation —
-        at most one readback per request (at commit time, when new fast
-        blocks have run), zero for the pre-request snapshot.  Off the
-        decode path, hence deliberately NOT routed through ``_readback``."""
-        cached_blocks, fast_active = self._fast_active_cache
-        if self.fast_blocks != cached_blocks:
-            fast_active = (int(np.asarray(self._fast_active_dev))
-                           if self.fast_blocks else 0)
-            self._fast_active_cache = (self.fast_blocks, fast_active)
+        """Raw cumulative counters (metrics plane) — host-only, never blocks
+        on the device, so schedulers can snapshot it around every session
+        turn for per-request delta ledgers.  The fast path counts its hits
+        in a per-session device accumulator that ``finish_session`` folds
+        into ``layer_lookups``/``layer_hits`` (one readback per session, at
+        retirement, off the decode path)."""
         return {
-            "lookups": self.layer_lookups + fast_active,
-            "hits": self.layer_hits + fast_active,
+            "lookups": self.layer_lookups,
+            "hits": self.layer_hits,
             "on_demand_loads": self.on_demand_loads,
             "prefetched": self.prefetcher.loaded_count,
             "evictions": self.cache.evictions,
@@ -586,8 +723,6 @@ class OffloadEngine:
         self.on_demand_loads = self.host_syncs = 0
         self.verify_blocks = self.fast_blocks = self.fast_fallbacks = 0
         self.iterations = self.drafted = self.accepted = 0
-        self._fast_active_dev = jnp.zeros((), jnp.float32)
-        self._fast_active_cache = (0, 0)
         self.cache.reset_stats()
         self.prefetcher.reset_stats()
 

@@ -9,12 +9,19 @@ lossless; offload policies require an MoE target.  The legacy single-axis
 spmoe``, ...).
 
 One Engine serves all ``--requests`` requests, so request 2+ hits a warm
-expert cache (watch ``hit_rate`` climb).  ``--stream`` prints tokens as
-each verify block commits; ``--stop-token`` ends a request early on every
-decode x offload combination identically.
+expert cache (watch ``hit_rate`` climb).  ``--concurrency N`` decodes up
+to N requests at once on that one warm cache — the round-robin session
+scheduler interleaves one committed verify block per session per turn, and
+every stream stays bit-identical to serving it alone.  ``--stream`` prints
+tokens as each verify block commits (prefixed with the request id when
+concurrent); ``--stop-token`` ends a request early on every decode x
+offload combination identically.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --decode sd --offload spmoe --tokens 32 --requests 2
+
+    # four requests, two decoded concurrently per turn
+    PYTHONPATH=src python -m repro.launch.serve --requests 4 --concurrency 2
 """
 from __future__ import annotations
 
@@ -60,6 +67,9 @@ def main():
                     help="DEPRECATED single-axis alias for --decode/--offload")
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--requests", type=int, default=1)
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="requests decoded concurrently on the one warm "
+                         "cache (round-robin sessions; 1 = serial)")
     ap.add_argument("--draft-len", type=int, default=4)
     ap.add_argument("--cache-slots", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
@@ -88,23 +98,41 @@ def main():
     prompts = [jax.random.randint(jax.random.PRNGKey(2 + i),
                                   (1, args.prompt_len), 0, cfg.vocab_size)
                for i in range(args.requests)]
+    reqs = [Request(prompt=prompt, max_new_tokens=args.tokens,
+                    stop_tokens=args.stop_token or (),
+                    request_id=f"req-{i}")
+            for i, prompt in enumerate(prompts)]
+
+    def report(res):
+        print(f"[{res.request_id}] finish={res.finish_reason}")
+        for k, v in sorted(res.metrics.as_dict().items()):
+            print(f"    {k}: {v}")
+
     with Engine(config) as eng:
-        for i, prompt in enumerate(prompts):
-            req = Request(prompt=prompt, max_new_tokens=args.tokens,
-                          stop_tokens=args.stop_token or (),
-                          request_id=f"req-{i}")
+        if args.concurrency > 1:
             if args.stream:
-                print(f"[{req.request_id}] tokens:", end=" ", flush=True)
-                for tok in eng.stream(req):
-                    print(tok, end=" ", flush=True)
+                for rid, tok in eng.serve(reqs, concurrency=args.concurrency):
+                    print(f"{rid}:{tok}", end=" ", flush=True)
                 print()
-                res = eng.last_result
+                results = eng.last_batch
             else:
-                res = eng.submit(req)
-                print(f"[{req.request_id}] tokens: {res.tokens}")
-            print(f"[{req.request_id}] finish={res.finish_reason}")
-            for k, v in sorted(res.metrics.as_dict().items()):
-                print(f"    {k}: {v}")
+                results = eng.serve_all(reqs, concurrency=args.concurrency)
+            for res in results:
+                if not args.stream:
+                    print(f"[{res.request_id}] tokens: {res.tokens}")
+                report(res)
+        else:
+            for req in reqs:
+                if args.stream:
+                    print(f"[{req.request_id}] tokens:", end=" ", flush=True)
+                    for tok in eng.stream(req):
+                        print(tok, end=" ", flush=True)
+                    print()
+                    res = eng.last_result
+                else:
+                    res = eng.submit(req)
+                    print(f"[{req.request_id}] tokens: {res.tokens}")
+                report(res)
         cum = eng.metrics()
         print(f"cumulative: requests={cum.requests} tokens={cum.tokens} "
               f"hit_rate={cum.hit_rate:.3f} tpot={cum.tpot_wall * 1e3:.1f}ms")
