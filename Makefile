@@ -1,7 +1,7 @@
 # Entry points the CI workflow and humans share.  PYTHONPATH=src is the
 # repo convention (no package install step; the container already has jax).
 
-.PHONY: test test-fast test-engine bench-offload bench-sessions
+.PHONY: test test-fast test-engine test-serving bench-offload bench-sessions
 
 test:            ## tier-1 verify: the FULL suite (~13 min on the container)
 	PYTHONPATH=src python -m pytest -x -q
@@ -11,6 +11,9 @@ test-fast:       ## CI tier: skips slow kernel sweeps + soaks (~8 min)
 
 test-engine:     ## pure serving-API signal (~3 min)
 	PYTHONPATH=src python -m pytest -x -q tests/test_engine.py tests/test_sessions.py
+
+test-serving:    ## full serving surface: engine + sessions + batched rounds
+	PYTHONPATH=src python -m pytest -x -q tests/test_engine.py tests/test_sessions.py tests/test_batched_verify.py
 
 bench-offload:   ## verification hot-path micro-bench -> BENCH_offload.json
 	PYTHONPATH=src python -m benchmarks.run --mode offload

@@ -51,9 +51,11 @@ def main():
         print(f"request 2 (warm cache) hit_rate: {res2.metrics.hit_rate:.2%} "
               f"(request 1: {res.metrics.hit_rate:.2%})")
 
-        # two sessions decoded concurrently on the same warm cache: the
-        # round-robin scheduler interleaves one verify block per session per
-        # turn, and each stream stays bit-identical to serving it alone
+        # two sessions decoded concurrently on the same warm cache: each
+        # scheduling round gathers the ready sessions' draft blocks into ONE
+        # fused verify dispatch (one routing pass, one cache_moe launch, ≤2
+        # host syncs per round instead of 2 per session), and each stream
+        # stays bit-identical to serving it alone
         prompt2 = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
                                      cfg.vocab_size)
         batch = eng.serve_all([Request(prompt=prompt, max_new_tokens=24),

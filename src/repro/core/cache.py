@@ -71,7 +71,17 @@ class ExpertCache:
         self.table_dev: Optional[jax.Array] = (
             jnp.full(table_shape, -1, jnp.int32)
             if table_shape is not None else None)
-        self._scatter_table = jax.jit(_table_scatter, donate_argnums=(0,))
+        # scatter lengths are padded to powers of two (repeating the final
+        # entry — a duplicate set of the same value is deterministic), so the
+        # jitted scatter compiles one executable per bucket instead of one
+        # per distinct insert size; the trace counter is the regression hook
+        self.table_scatter_traces = 0
+
+        def _counting_scatter(table, ls, es, vals):
+            self.table_scatter_traces += 1     # trace-time side effect only
+            return _table_scatter(table, ls, es, vals)
+
+        self._scatter_table = jax.jit(_counting_scatter, donate_argnums=(0,))
         # stats
         self.hits = 0
         self.misses = 0
@@ -144,7 +154,8 @@ class ExpertCache:
 
     def insert(self, keys: Sequence[ExpertKey],
                host_arrays: Dict[str, np.ndarray],
-               mark_used: bool = False) -> List[int]:
+               mark_used: bool = False,
+               stats: Optional[Dict[str, int]] = None) -> List[int]:
         """Batched I/O (paper §3.3): one device transfer + one donated scatter
         for the whole group of experts.  host_arrays: name -> [n, ...].
 
@@ -155,6 +166,11 @@ class ExpertCache:
         host does next (the next ``HostExpertStore.fetch`` in particular —
         that is the double-buffering contract, see offload.py).  Use
         ``wait()`` for a hard barrier.
+
+        ``stats`` (optional) is credited with this call's ``evictions`` /
+        ``prefetch_evicted_unused`` — how per-session I/O ledgers attribute
+        eviction work to the session (or prefetch task) that caused it
+        instead of to whoever's turn the async load happened to land in.
         """
         if not keys:
             return []
@@ -175,8 +191,15 @@ class ExpertCache:
                     sel.append(i)
                     seen.add(k)
             if fresh:
+                ev0, pu0 = self.evictions, self.prefetch_evicted
                 slots, evicted = self._allocate(
                     len(fresh), protect=frozenset(keys))
+                if stats is not None:        # lock held: counters consistent
+                    stats["evictions"] = stats.get("evictions", 0) + \
+                        self.evictions - ev0
+                    stats["prefetch_evicted_unused"] = \
+                        stats.get("prefetch_evicted_unused", 0) + \
+                        self.prefetch_evicted - pu0
                 if len(sel) == len(host_arrays[next(iter(host_arrays))]):
                     picked = {n: arr for n, arr in host_arrays.items()}
                 else:
@@ -193,6 +216,14 @@ class ExpertCache:
                     ls = np.fromiter((k[0] for k in evicted + fresh), np.int32)
                     es = np.fromiter((k[1] for k in evicted + fresh), np.int32)
                     vals = np.asarray([-1] * len(evicted) + slots, np.int32)
+                    # pad to the next power of two by repeating the final
+                    # (l, e, val) triple — same index, same value, so the
+                    # duplicate set is a deterministic no-op
+                    pad = (1 << (len(vals) - 1).bit_length()) - len(vals)
+                    if pad:
+                        ls = np.concatenate([ls, np.repeat(ls[-1:], pad)])
+                        es = np.concatenate([es, np.repeat(es[-1:], pad)])
+                        vals = np.concatenate([vals, np.repeat(vals[-1:], pad)])
                     self.table_dev = self._scatter_table(
                         self.table_dev, ls, es, vals)
             # refresh LRU position of already-present keys

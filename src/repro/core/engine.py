@@ -290,8 +290,8 @@ class Session:
         assert not engine._closed, "engine is closed"
         self.engine = engine
         self.request = request
-        prompt = request.prompt_array()
-        need = prompt.shape[1] + request.max_new_tokens + \
+        self._prompt = request.prompt_array()
+        need = self._prompt.shape[1] + request.max_new_tokens + \
             engine._max_block_len() + 1
         assert need <= engine.config.max_seq, (
             f"request needs {need} positions but max_seq is "
@@ -299,8 +299,13 @@ class Session:
         self._stop = set(int(t) for t in request.stop_tokens)
         self.sstats: Dict[str, Any] = {"iterations": 0, "drafted": 0,
                                        "accepted": 0}
-        self.gen = engine._chunk_stream(prompt, request.max_new_tokens,
-                                        self.sstats)
+        # offload runtimes drive the DecodeState turn API directly (so the
+        # serve scheduler can gather several sessions' blocks into one
+        # batched verify round); non-offload paths keep the chunk generator
+        self.dstate = None              # runtime DecodeState, lazily started
+        self.gen = None if engine.runtime is not None else \
+            engine._chunk_stream(self._prompt, request.max_new_tokens,
+                                 self.sstats)
         self.ledger: Dict[str, int] = {k: 0 for k in RUNTIME_COUNTER_KEYS}
         self.emitted: List[int] = []
         self.wall = 0.0                 # decode-side time, not consumer time
@@ -323,14 +328,54 @@ class Session:
             for k in self.ledger:
                 self.ledger[k] += after.get(k, 0) - before.get(k, 0)
 
+    def _advance(self) -> Optional[List[int]]:
+        """One solo decode step: start the runtime session on first use
+        (prefill), then one committed verify block; None when exhausted."""
+        rt = self.engine.runtime
+        if rt is not None:
+            if self.dstate is None:
+                self.dstate = rt.start_session(self._prompt,
+                                               self.request.max_new_tokens)
+            return rt.session_turn(self.dstate)
+        try:
+            return next(self.gen)
+        except StopIteration:
+            return None
+
+    def _close_decode(self):
+        """Retire the decode side (waits out this session's prefetch tasks
+        and commits its device-side counters)."""
+        if self.engine.runtime is not None:
+            if self.dstate is not None:
+                self.engine.runtime.finish_session(self.dstate)
+        else:
+            self.gen.close()
+
     def turn(self) -> Optional[List[int]]:
         """Advance one committed verify block.  Returns the newly committed
         tokens (truncated right after a stop token) or None when done."""
         if self.done:
             return None
-        try:
-            chunk = self._step(lambda: next(self.gen))
-        except StopIteration:
+        return self._commit_chunk(self._step(self._advance))
+
+    def deliver(self, chunk: Optional[List[int]], delta: Dict[str, int],
+                wall: float) -> Optional[List[int]]:
+        """Commit a chunk produced by a batched cross-session round
+        (``OffloadEngine.session_turns``): fold the round's per-session
+        counter delta and this session's own decode wall time (measured
+        per-phase by the runtime — a batchmate's miss fallback is not
+        charged here) into the ledger, then run the same
+        stop-token/finalize logic as a solo :meth:`turn`."""
+        if self.done:
+            return None
+        for k in self.ledger:
+            self.ledger[k] += delta.get(k, 0)
+        self.wall += wall
+        return self._commit_chunk(chunk)
+
+    def _commit_chunk(self, chunk: Optional[List[int]]
+                      ) -> Optional[List[int]]:
+        if chunk is None:
             self._finalize("length")
             return None
         out: List[int] = []
@@ -345,19 +390,26 @@ class Session:
 
     def abort(self):
         """Retire an unfinished session as ``"aborted"`` (no-op when already
-        finished): the decode generator is closed — which waits out this
+        finished): the decode side is closed — which waits out this
         session's prefetch tasks and commits its counters — so the engine
         stays warm and immediately reusable."""
         if not self.done:
             self._finalize("aborted")
 
     def _finalize(self, finish: str):
-        self._step(self.gen.close)    # offload path retires its DecodeState
+        self._step(self._close_decode)  # offload path retires its DecodeState
         m = Metrics(requests=1, tokens=len(self.emitted), wall_s=self.wall,
                     cutoff_layer=self.engine.cutoff_layer)
         if self.engine.runtime is not None:
             for k, v in self.ledger.items():
                 setattr(m, k, v)
+            if self.dstate is not None:
+                # I/O counters come from the session's owner-attributed
+                # ledger (finalized by finish_session above): a prefetch
+                # load belongs to the session whose task fetched it, not to
+                # whichever session's turn it happened to land in
+                for k, v in self.dstate.io.items():
+                    setattr(m, k, v)
         else:
             m.iterations = self.sstats["iterations"]
             m.drafted = self.sstats["drafted"]
@@ -448,6 +500,14 @@ class Engine:
         construction — greedy turns commit 1 token, sd / sd-adaptive turns
         one draft-then-verify block of that session's current draft length.
 
+        With an offload runtime, each scheduling round gathers the ready
+        sessions' draft blocks into ONE fused cross-session verify dispatch
+        (one routing pass, one page-table gather, one ``cache_moe`` launch,
+        ≤2 host syncs per ROUND instead of 2 per session) — concurrency
+        makes the hot path cheaper than serial, not merely not-worse.  A
+        session that misses falls back alone without dragging its
+        batchmates off the fast path.
+
         Yields ``(request_id, token)`` pairs in commit order (request_id
         falls back to ``"req-<index>"``).  ``self.last_batch`` is reset to
         ``[]`` on this call and holds the per-request
@@ -472,8 +532,21 @@ class Engine:
             while active or waiting:
                 while waiting and len(active) < concurrency:
                     active.append(waiting.pop(0))
+                # batched cross-session round: every started runtime session
+                # advances through ONE fused verify dispatch (one routing
+                # pass / table gather / cache_moe launch, ≤2 host syncs for
+                # the whole round); fresh admissions run their prefill solo
+                # first, and non-offload engines always turn solo.
+                round_sts = [s for _, s in active if s.dstate is not None]
+                delivered: Dict[int, Optional[List[int]]] = {}
+                if round_sts:
+                    res = self.runtime.session_turns(
+                        [s.dstate for s in round_sts])
+                    for s, (chunk, delta, wall) in zip(round_sts, res):
+                        delivered[id(s)] = s.deliver(chunk, delta, wall)
                 for name, s in list(active):
-                    chunk = s.turn()
+                    chunk = delivered[id(s)] if id(s) in delivered \
+                        else s.turn()
                     if s.done:
                         active.remove((name, s))
                     for tok in chunk or ():
@@ -520,10 +593,12 @@ class Engine:
         return cfg.initial_draft_len + 1
 
     def _chunk_stream(self, prompt, max_new_tokens, sstats):
-        """The per-combination committed-chunk generator."""
+        """The committed-chunk generator for engines WITHOUT an offload
+        runtime (offload == none).  Runtime-backed sessions drive the
+        DecodeState turn API directly instead (see Session._advance), so the
+        serve scheduler can batch several sessions into one verify round."""
         cfg = self.config
-        if self.runtime is not None:
-            return self.runtime.generate_stream(prompt, max_new_tokens)
+        assert self.runtime is None
         if cfg.decode == DecodePolicy.GREEDY.value:
             if self._greedy_step is None:
                 self._greedy_step = S.make_greedy_step(self.target)

@@ -27,7 +27,7 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.cache import ExpertCache, ExpertKey
 from repro.core.offload import HostExpertStore
@@ -39,6 +39,13 @@ class PrefetchTask:
     ready: threading.Event                 # producer-side enqueue checkpoint
     done: threading.Event = field(default_factory=threading.Event)
     cancelled: bool = False
+    # per-task I/O attribution (prefetched / evictions /
+    # prefetch_evicted_unused), filled by the executing thread; the session
+    # that submitted the task folds it at retirement — after done.wait(), so
+    # the Event publishes the writes.  This is what keeps per-request I/O
+    # ledgers exact when a load lands between two sessions' interleaved
+    # turns (it belongs to the task's owner, not to whoever's turn it was).
+    stats: Dict[str, int] = field(default_factory=dict)
 
 
 class Prefetcher:
@@ -109,14 +116,16 @@ class Prefetcher:
             return
         if self.batched:
             arrays = self.store.fetch(keys)
-            self.cache.insert_async(keys, arrays)    # one transfer + scatter
+            self.cache.insert_async(keys, arrays,    # one transfer + scatter
+                                    stats=task.stats)
             self.io_events.append(len(keys))
         else:
             for k in keys:                            # per-expert sync I/O
                 arrays = self.store.fetch([k])
-                self.cache.insert_async([k], arrays)
+                self.cache.insert_async([k], arrays, stats=task.stats)
                 self.io_events.append(1)
         self.loaded_count += len(keys)
+        task.stats["prefetched"] = task.stats.get("prefetched", 0) + len(keys)
 
     # ------------------------------------------------------------------ admin
     def reset_stats(self):

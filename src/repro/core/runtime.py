@@ -76,6 +76,19 @@ prefetcher, compiled steps) and cumulative counters.  The turn API —
 session by one committed verify block at a time; ``generate_stream`` is the
 single-session wrapper, and ``Engine.serve`` (core/engine.py) is the
 round-robin multi-session scheduler on top.
+
+Batched cross-session verification: ``session_turns`` advances a whole
+scheduling round at once — each ready session drafts sequentially, then
+every armed session's block is verified in ONE fused dispatch
+(``_verify_fast_batched``: per-session attention against each session's own
+KV cache, but one concatenated [ΣT_i, ·] row batch through routing, the
+``table_dev`` gather, the ``cache_moe`` kernel and the head), with ≤2 host
+syncs for the whole round instead of 2·N.  Row-wise ops are bit-stable
+under concatenation, so batched rounds stay lossless — bit-identical to
+serving every session alone; a session that misses falls back alone to the
+slow path without dragging its batchmates off the fast path.  Per-session
+I/O (prefetched / evictions) is attributed to the session that caused it
+via task-owner stats, not to whoever's turn an async load landed in.
 """
 from __future__ import annotations
 
@@ -142,6 +155,14 @@ class DecodeState:
     inflight: List[Any] = dataclasses.field(default_factory=list)
     finished: bool = False
     committed: bool = False
+    # owner-attributed I/O ledger: evictions this session's synchronous
+    # (on-demand wave) inserts caused land here directly; its prefetch
+    # tasks' stats are folded in by finish_session after done.wait().  This
+    # replaces turn-window counter deltas for the per-request
+    # prefetched/evictions metrics, which mis-attributed async loads landing
+    # between two sessions' turns (ROADMAP open item, closed).
+    io: Dict[str, int] = dataclasses.field(default_factory=lambda: {
+        "prefetched": 0, "evictions": 0, "prefetch_evicted_unused": 0})
 
 
 class OffloadEngine:
@@ -192,6 +213,7 @@ class OffloadEngine:
         # own device-resident [L, E] count array of this shape.
         self._hist_shape = (self.store.num_layers, cfg.num_experts)
         self._fast_traces = 0     # trace-time counter (retrace regression)
+        self._batched_traces = 0  # ditto for the cross-session fused path
         self._build_jitted()
         # stats (engine-global plane: cumulative across every session)
         self.layer_hits = 0
@@ -204,6 +226,13 @@ class OffloadEngine:
         self.iterations = 0
         self.drafted = 0
         self.accepted = 0
+        # round-level accounting for the batched cross-session scheduler
+        # (bench metrics, not part of counters()): verify_rounds counts
+        # session_turns rounds that verified at least one block,
+        # round_launches the verify dispatches those rounds needed — 1 fused
+        # launch per all-hit round regardless of how many sessions it served.
+        self.verify_rounds = 0
+        self.round_launches = 0
         # adaptive fast-path arming is per-session (DecodeState.fast_ok):
         # cold caches go straight to the slow (miss-resolving) path; a
         # zero-miss slow block re-arms, and after a misprediction
@@ -326,6 +355,90 @@ class OffloadEngine:
             new_history = history + act.astype(history.dtype)
             return head(x), ok, new_tcache, new_history, nact
 
+        def verify_fast_batched(bufs, table, hists, tokens, pos, tcaches):
+            """Whole scheduling ROUND as one device computation: every ready
+            session's verify block in a single fused dispatch.  ``tokens`` is
+            a tuple of [1, T_i] blocks (T_i may be ragged), ``hists`` /
+            ``pos`` / ``tcaches`` the matching per-session state tuples.
+
+            Attention stays per-session (each has its own KV cache and
+            position — identical shapes and ops to the solo fast path, so
+            per-session results are bit-identical to serving it alone), while
+            everything row-wise is concatenated into one [ΣT_i, ·] batch:
+            ONE routing pass, ONE ``table_dev`` gather, ONE ``cache_moe``
+            launch and ONE head projection per layer-scan, instead of one
+            each per session.  Row-wise ops are bit-stable under
+            concatenation (each row's reduction order is independent of the
+            batch), which is what makes batched rounds lossless.
+
+            Returns (logits [1, ΣT, V], ok [N] per-session all-hit flags,
+            new_tcaches, new_hists, nact [N]); nothing here syncs to host.
+            A session that misses falls back alone — the caller commits its
+            batchmates' results and re-runs only that session's block on the
+            slow path."""
+            self._batched_traces += 1     # trace-time side effect only
+            n = len(tokens)
+            Ts = tuple(int(t.shape[1]) for t in tokens)
+            offs = [0]
+            for t in Ts:
+                offs.append(offs[-1] + t)
+            new_tcaches = [dict(tc) for tc in tcaches]
+            xs = []
+            for i in range(n):
+                x = embed(tokens[i])
+                if "dense_layers" in self.tparams:
+                    x, new_tcaches[i]["dense_layers"] = dense_stack(
+                        x, tcaches[i]["dense_layers"], pos[i])
+                xs.append(x)
+
+            def mbody(carry, scan_xs):
+                xs_c, ok_c, nact_c = carry
+                lp, cls, trow = scan_xs
+                x2s, ncls, h2s = [], [], []
+                for i in range(n):
+                    x2, ncl, h2 = attn_half(lp, xs_c[i], cls[i], pos[i])
+                    x2s.append(x2)
+                    ncls.append(ncl)
+                    h2s.append(h2)
+                h2cat = jnp.concatenate(
+                    [h2s[i].reshape(Ts[i], cfg.d_model) for i in range(n)])
+                w, ids, _ = gate_fn(lp["gate"], h2cat)    # ONE routing pass
+                slot_ids = trow[ids]                      # [ΣT, k]; -1 = miss
+                hit = slot_ids >= 0
+                ycat = cached_moe_apply(bufs, h2cat, slot_ids,
+                                        jnp.where(hit, w, 0.0))
+                outs, oks, nacts, acts = [], [], [], []
+                for i in range(n):
+                    r0, r1 = offs[i], offs[i + 1]
+                    y3 = ycat[r0:r1].reshape(1, Ts[i], cfg.d_model)
+                    if cfg.num_shared_experts:
+                        y3 = y3 + ffn_forward(lp["shared"], h2s[i], "swiglu")
+                    outs.append(x2s[i] + y3)
+                    oks.append(jnp.logical_and(ok_c[i],
+                                               jnp.all(hit[r0:r1])))
+                    activated = jnp.zeros((cfg.num_experts,), jnp.int32
+                                          ).at[ids[r0:r1].reshape(-1)
+                                               ].add(1) > 0
+                    acts.append(activated)
+                    nacts.append(nact_c[i] +
+                                 jnp.sum(activated.astype(jnp.float32)))
+                return (tuple(outs), tuple(oks), tuple(nacts)), \
+                    (tuple(ncls), tuple(acts))
+
+            carry0 = (tuple(xs),
+                      tuple(jnp.bool_(True) for _ in range(n)),
+                      tuple(jnp.float32(0.0) for _ in range(n)))
+            (xs_f, ok_f, nact_f), (nlayers, acts) = jax.lax.scan(
+                mbody, carry0,
+                (lp_scan, tuple(tc["layers"] for tc in tcaches), table))
+            for i in range(n):
+                new_tcaches[i]["layers"] = nlayers[i]
+            new_hists = tuple(hists[i] + acts[i].astype(hists[i].dtype)
+                              for i in range(n))
+            xcat = jnp.concatenate(xs_f, axis=1)          # [1, ΣT, d]
+            return (head(xcat), jnp.stack(ok_f), tuple(new_tcaches),
+                    new_hists, jnp.stack(nact_f))
+
         self._attn_half = jax.jit(attn_half)
         self._gate = jax.jit(gate_fn)
         self._moe_apply = jax.jit(cached_moe_apply)
@@ -334,6 +447,7 @@ class OffloadEngine:
         self._embed = jax.jit(embed)
         self._head = jax.jit(head)
         self._verify_fast = jax.jit(verify_fast)
+        self._verify_fast_batched = jax.jit(verify_fast_batched)
         # fixed-shape masked row add: one executable regardless of how many
         # experts a layer activated (a [E]-gather scatter would retrace per
         # distinct unique-count)
@@ -469,7 +583,8 @@ class OffloadEngine:
                 for w0 in range(0, len(misses), wave_size):
                     wave = misses[w0:w0 + wave_size]
                     arrays = self.store.fetch(wave)
-                    slots = self.cache.insert(wave, arrays, mark_used=True)
+                    slots = self.cache.insert(wave, arrays, mark_used=True,
+                                              stats=st.io)
                     wave_lut = np.full((cfg.num_experts,), -1, np.int64)
                     for (key, s) in zip(wave, slots):
                         wave_lut[key[1]] = s
@@ -526,13 +641,14 @@ class OffloadEngine:
         st.pending = [int(st.cur[0, 0])]
         return st
 
-    def session_turn(self, st: DecodeState) -> Optional[List[int]]:
-        """Advance one session by ONE committed chunk; returns the chunk
-        (clipped to the max_new_tokens budget) or None once the session has
-        nothing left to emit.  The block schedule is decode-policy-aware:
-        greedy = a 1-token block with no drafting stage, sd = a fixed-N
-        draft-then-verify block, sd-adaptive = the EWMA controller of
-        core/sd.py driving this session's own draft length."""
+    # sentinel: _turn_early found nothing to deliver — the turn must draft
+    # and verify (None is a real return value, "session done")
+    _NEEDS_VERIFY = object()
+
+    def _turn_early(self, st: DecodeState):
+        """The no-verify turn outcomes: session already done (None), prefill
+        chunk awaiting delivery (the chunk), or token budget exhausted
+        (None).  Returns ``_NEEDS_VERIFY`` when a verify block is due."""
         if st.finished:
             return None
         if st.pending is not None:             # deliver the prefill token
@@ -542,8 +658,13 @@ class OffloadEngine:
         if st.emitted_total >= st.max_new:
             st.finished = True
             return None
-        self._st = st
-        cfg = self.config
+        return self._NEEDS_VERIFY
+
+    def _turn_draft(self, st: DecodeState
+                    ) -> Tuple[List[int], jax.Array]:
+        """Prefetch-signal + drafting stage of one turn: MoE-Infinity
+        history prefetch, the draft loop with SP-MoE speculative prefetching,
+        and the assembled verify block.  Returns (drafts, block [1, N+1])."""
         N = st.n
         # MoE-Infinity: request-level historical prefetch, all layers
         if self.policy == "moe-infinity":
@@ -574,12 +695,18 @@ class OffloadEngine:
                     _, miss = self.cache.lookup(keys, touch=st.fast_ok)
                     if miss:
                         self._prefetch(st, miss)
-        # ---- verification ----
         block = jnp.concatenate(
             [st.cur, jnp.asarray([drafts], jnp.int32)], axis=1) \
             if drafts else st.cur
-        tlogits, st.tcache = self._verify_block(block, st.pos, st.tcache)
-        greedy = self._readback(jnp.argmax(tlogits, -1))[0]      # accept
+        return drafts, block
+
+    def _turn_commit(self, st: DecodeState, drafts: List[int],
+                     greedy: np.ndarray) -> List[int]:
+        """Accept/commit stage: greedy is the verified block's argmax row
+        ([N+1] host ints).  Identical whether the block was verified solo or
+        as a slice of a batched cross-session round."""
+        cfg = self.config
+        N = len(drafts)
         d = np.asarray(drafts, np.int64)
         match = d == greedy[:N]
         n_acc = int(np.cumprod(match.astype(np.int64)).sum())
@@ -597,6 +724,162 @@ class OffloadEngine:
         st.emitted_total += len(chunk)
         st.finished = st.emitted_total >= st.max_new
         return chunk
+
+    def session_turn(self, st: DecodeState) -> Optional[List[int]]:
+        """Advance one session by ONE committed chunk; returns the chunk
+        (clipped to the max_new_tokens budget) or None once the session has
+        nothing left to emit.  The block schedule is decode-policy-aware:
+        greedy = a 1-token block with no drafting stage, sd = a fixed-N
+        draft-then-verify block, sd-adaptive = the EWMA controller of
+        core/sd.py driving this session's own draft length."""
+        early = self._turn_early(st)
+        if early is not self._NEEDS_VERIFY:
+            return early
+        self._st = st
+        drafts, block = self._turn_draft(st)
+        tlogits, st.tcache = self._verify_block(block, st.pos, st.tcache)
+        greedy = self._readback(jnp.argmax(tlogits, -1))[0]      # accept
+        return self._turn_commit(st, drafts, greedy)
+
+    def _counter_delta(self, before: Dict[str, int]) -> Dict[str, int]:
+        after = self.counters()
+        return {k: after[k] - before[k] for k in _COUNTER_KEYS}
+
+    @staticmethod
+    def _merge_delta(into: Dict[str, int], delta: Dict[str, int]):
+        for k, v in delta.items():
+            into[k] = into.get(k, 0) + v
+
+    def session_turns(self, sts: Sequence[DecodeState]
+                      ) -> List[Tuple[Optional[List[int]], Dict[str, int],
+                                      float]]:
+        """Advance SEVERAL sessions by one committed verify block each in a
+        single scheduling round, verifying the ready sessions' blocks with
+        ONE fused fast-path dispatch (``_verify_fast_batched``): one routing
+        pass, one ``table_dev`` gather, one ``cache_moe`` launch, and ≤2
+        host syncs for the whole round — the per-session all-hit vector and
+        the accept/reject argmax, each read back once — instead of 2·N.
+
+        Per-session drafting (and its prefetch submissions) stays
+        sequential ahead of the fused verify; sessions whose fast path is
+        not armed (cold cache, post-misprediction penalty, adapmoe) verify
+        solo on their usual path, and a batched session whose block missed
+        falls back ALONE to the slow miss-resolving path — its batchmates'
+        fused results commit untouched.  Per-session results are
+        bit-identical to ``session_turn`` serving each session by itself.
+
+        Returns one ``(chunk, counter_delta, wall_s)`` triple per session:
+        ``counter_delta`` attributes this round's cumulative-counter growth
+        to the session that caused it (the ≤2 shared round syncs are charged
+        to the round's first fused session so the per-request ledgers still
+        tile the cumulative counters exactly), and ``wall_s`` is the decode
+        time this session's own phases took — a fallback's slow re-run is
+        charged to the session that missed, only the genuinely shared fused
+        dispatch is split evenly across its members."""
+        chunks: List[Optional[List[int]]] = [None] * len(sts)
+        deltas: List[Dict[str, int]] = [{} for _ in sts]
+        walls: List[float] = [0.0] * len(sts)
+        pend: List[Tuple[int, DecodeState, List[int], jax.Array]] = []
+        for i, st in enumerate(sts):
+            before = self.counters()
+            t0 = time.perf_counter()
+            early = self._turn_early(st)
+            if early is not self._NEEDS_VERIFY:
+                chunks[i] = early
+                deltas[i] = self._counter_delta(before)
+                walls[i] += time.perf_counter() - t0
+                continue
+            self._st = st
+            drafts, block = self._turn_draft(st)
+            deltas[i] = self._counter_delta(before)
+            walls[i] += time.perf_counter() - t0
+            pend.append((i, st, drafts, block))
+        if pend:
+            self.verify_rounds += 1
+        fused = [p for p in pend
+                 if p[1].fast_ok and self.policy != "adapmoe"]
+        if len(fused) >= 2:
+            # canonical order: sort by block length (stable, so ties keep
+            # admission order) — (4,6) and (6,4) rounds then share ONE
+            # fused-trace signature instead of retracing per permutation of
+            # sd-adaptive's ragged lengths.  Concat order is transparent to
+            # each session's results (row-stable ops), so this is lossless.
+            fused.sort(key=lambda p: p[3].shape[1])
+            fused_idx = {p[0] for p in fused}
+            solo = [p for p in pend if p[0] not in fused_idx]
+            self._round_fused(fused, chunks, deltas, walls)
+        else:
+            solo = pend
+        for i, st, drafts, block in solo:
+            before = self.counters()
+            t0 = time.perf_counter()
+            self._st = st
+            self.round_launches += 1
+            tlogits, st.tcache = self._verify_block(block, st.pos, st.tcache)
+            greedy = self._readback(jnp.argmax(tlogits, -1))[0]
+            chunks[i] = self._turn_commit(st, drafts, greedy)
+            self._merge_delta(deltas[i], self._counter_delta(before))
+            walls[i] += time.perf_counter() - t0
+        return list(zip(chunks, deltas, walls))
+
+    def _round_fused(self, fused, chunks, deltas, walls):
+        """The fused leg of one scheduling round: dispatch every armed
+        session's block in one ``_verify_fast_batched`` call, read the
+        per-session all-hit vector and the round's accept/reject argmax back
+        once each, then commit hits / re-run misses per session."""
+        idxs = [p[0] for p in fused]
+        sts = [p[1] for p in fused]
+        blocks = [p[3] for p in fused]
+        offs = [0]
+        for b in blocks:
+            offs.append(offs[-1] + b.shape[1])
+        self.round_launches += 1
+        t0 = time.perf_counter()
+        # snapshot + dispatch under the cache lock: a concurrent donating
+        # insert must not delete the buffer handle mid-dispatch.
+        with self.cache.lock:
+            bufs, table = self.cache.snapshot()
+            logits, ok_vec, new_tcaches, new_hists, nact_vec = \
+                self._verify_fast_batched(
+                    bufs, table,
+                    tuple(st.history_dev for st in sts),
+                    tuple(blocks),
+                    tuple(st.pos for st in sts),
+                    tuple(st.tcache for st in sts))
+        ok = self._readback(ok_vec)                 # round sync 1 of ≤2
+        greedy = self._readback(jnp.argmax(logits, -1))[0]   # round sync 2
+        shared = (time.perf_counter() - t0) / len(fused)
+        for i in idxs:      # the fused dispatch is genuinely shared work
+            walls[i] += shared
+        deltas[idxs[0]]["host_syncs"] = \
+            deltas[idxs[0]].get("host_syncs", 0) + 2
+        for j, (i, st, drafts, _) in enumerate(fused):
+            before = self.counters()
+            t0 = time.perf_counter()
+            self._st = st
+            self.verify_blocks += 1
+            if bool(ok[j]):
+                st.history_dev = new_hists[j]
+                st.fast_active_dev = st.fast_active_dev + nact_vec[j]
+                st.fast_blocks += 1
+                self.fast_blocks += 1
+                st.tcache = new_tcaches[j]
+                chunks[i] = self._turn_commit(
+                    st, drafts, greedy[offs[j]:offs[j + 1]])
+            else:
+                # mispredicted availability: this session falls back alone;
+                # its speculative tcache/history copies are discarded
+                st.fast_ok = False
+                st.fast_penalty = 2
+                self._fast_hint = False
+                self.fast_fallbacks += 1
+                self.round_launches += 1
+                tlogits, st.tcache = self._verify_block_slow(
+                    blocks[j], st.pos, st.tcache)
+                g = self._readback(jnp.argmax(tlogits, -1))[0]
+                chunks[i] = self._turn_commit(st, drafts, g)
+            self._merge_delta(deltas[i], self._counter_delta(before))
+            walls[i] += time.perf_counter() - t0
 
     def _prefetch(self, st: DecodeState, keys):
         """Submit a prefetch on behalf of ``st``, remembering the task so
@@ -625,6 +908,8 @@ class OffloadEngine:
             self.layer_hits += fast_active
         for task in st.inflight:       # worker sets done even on task error
             task.done.wait()
+            for k, v in task.stats.items():   # owner-attributed I/O: the
+                st.io[k] = st.io.get(k, 0) + v  # task belongs to THIS session
         st.inflight.clear()
         self.cache.wait()              # dispatched H2D transfers have landed
 
@@ -723,6 +1008,7 @@ class OffloadEngine:
         self.on_demand_loads = self.host_syncs = 0
         self.verify_blocks = self.fast_blocks = self.fast_fallbacks = 0
         self.iterations = self.drafted = self.accepted = 0
+        self.verify_rounds = self.round_launches = 0
         self.cache.reset_stats()
         self.prefetcher.reset_stats()
 

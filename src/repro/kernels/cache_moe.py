@@ -17,12 +17,18 @@ in which slots are masked.
 
 Verification blocks are tiny (N+1 tokens × k choices), so the capacity per
 slot is the worst case ``T·k`` rounded up to the block size — no drops, which
-speculative-decoding losslessness requires.  The tradeoff: the grid covers
-all ``S`` slots at that capacity (O(S·C) rows for T·k real ones), which is
-cheap for verify-block shapes but wasteful for large slot pools — see
-ROADMAP "Open items" for the occupancy-masked variant.
+speculative-decoding losslessness requires.  A block can route to at most
+``T·k`` *distinct* slots, so when the pool is larger than that the slot axis
+is **occupancy-compacted** before the GEMM: the ≤ ``min(S, T·k)`` slots that
+actually received a choice are renumbered densely, only their weight rows are
+gathered, and the grid covers ``M = min(S, T·k)`` slots instead of ``S`` —
+FLOPs and weight traffic are O(M·C·d·f), independent of the pool size.
+(Previously the grid covered all S slots at capacity C, burning O(S·C·d·f)
+on empty slots — ROADMAP open item, closed.)  Each row's blocked
+accumulation is unchanged by the renumbering, so compaction is numerically
+transparent.
 
-Oracle: kernels/ref.cache_moe_ref.
+Oracle: kernels/ref.cache_moe_ref (ragged grouping, same compaction idea).
 """
 from __future__ import annotations
 
@@ -45,6 +51,39 @@ def _capacity(n_choices: int, block_c: int) -> int:
     if c > block_c:
         c = -(-c // block_c) * block_c
     return c
+
+
+def compact_occupied_slots(slot_ids: jax.Array, wu: jax.Array, wd: jax.Array,
+                           wg: Optional[jax.Array], num_compact: int
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                      Optional[jax.Array]]:
+    """Renumber the occupied slots densely into ``[0, num_compact)`` and
+    gather just their weight rows.
+
+    slot_ids: [T, k] int (-1 = skip) over a pool of ``S = wu.shape[0]``
+    slots.  A block of T·k choices touches at most ``min(S, T·k)`` distinct
+    slots, so ``num_compact`` that large is always drop-free.  Returns
+    (compact_ids [T, k] in [0, num_compact) ∪ {-1}, wu_c, wd_c, wg_c with a
+    leading axis of ``num_compact``).  Unoccupied compact rows keep slot 0's
+    weights — harmless, no choice maps to them.
+    """
+    S = wu.shape[0]
+    flat = slot_ids.reshape(-1)
+    valid = flat >= 0
+    # occupancy via add (a set-scatter would race -1-clipped misses against
+    # real hits on slot 0 with differing values)
+    counts = jnp.zeros((S,), jnp.int32).at[
+        jnp.where(valid, flat, 0)].add(valid.astype(jnp.int32))
+    occ = counts > 0
+    rank = jnp.cumsum(occ.astype(jnp.int32)) - 1          # dense renumbering
+    inv = jnp.where(occ, rank, -1)                        # slot -> compact
+    comp2slot = jnp.zeros((num_compact,), jnp.int32).at[
+        jnp.where(occ, rank, num_compact)].set(
+        jnp.arange(S, dtype=jnp.int32), mode="drop")
+    comp_ids = jnp.where(slot_ids >= 0,
+                         inv[jnp.clip(slot_ids, 0, S - 1)], -1)
+    take = lambda w: None if w is None else jnp.take(w, comp2slot, axis=0)
+    return comp_ids, take(wu), take(wd), take(wg)
 
 
 def dispatch_to_slots(slot_ids: jax.Array, num_slots: int, capacity: int
@@ -142,6 +181,10 @@ def cache_moe(x: jax.Array, slot_ids: jax.Array, weights: jax.Array,
     k = slot_ids.shape[1]
     S = wu.shape[0]
     C = _capacity(T * k, block_c)
+    M = min(S, T * k)
+    if S > M:          # occupancy compaction: grid covers M slots, not S
+        slot_ids, wu, wd, wg = compact_occupied_slots(slot_ids, wu, wd, wg, M)
+        S = M
     idx, valid, pos = dispatch_to_slots(slot_ids, S, C)
     xg = jnp.take(x, idx.reshape(-1), axis=0).reshape(S, C, d)
     if wg is not None:

@@ -82,16 +82,34 @@ def cache_moe_ref(x: jax.Array, slot_ids: jax.Array, weights: jax.Array,
 
     Per (token, choice): y += w · FFN_{slot}(x); slot_ids < 0 contribute 0.
     swiglu when wg is given, gelu-up otherwise.
+
+    Ragged grouping: choices are sorted by slot and pushed through
+    ``lax.ragged_dot`` against the slot-weight stack — exactly T·k·(3·d·f)
+    FLOPs and no weight materialization.  (The previous formulation gathered
+    a [T, k, d, f] weight tensor per call, which is prohibitive at full
+    model scale — ROADMAP open item, closed.)  Misses are clipped into slot
+    0's group and masked out of the combine; a token's choices keep their
+    relative order under the stable slot sort, so the per-token f32 sum is
+    deterministic and independent of how many other rows share the call.
     """
-    s = jnp.clip(slot_ids, 0, wu.shape[0] - 1)
+    T, k = slot_ids.shape
+    S = wu.shape[0]
+    flat = slot_ids.reshape(-1)                              # [T*k]
+    sane = jnp.clip(flat, 0, S - 1)
+    order = jnp.argsort(sane, stable=True)
+    xs = jnp.take(x, order // k, axis=0)                     # [T*k, d]
+    group_sizes = jnp.bincount(sane, length=S).astype(jnp.int32)
     if wg is not None:
-        h = jax.nn.silu(jnp.einsum("td,tkdf->tkf", x, wg[s]))
-        h = h * jnp.einsum("td,tkdf->tkf", x, wu[s])
+        h = jax.nn.silu(jax.lax.ragged_dot(xs, wg, group_sizes))
+        h = h * jax.lax.ragged_dot(xs, wu, group_sizes)
     else:
-        h = jax.nn.gelu(jnp.einsum("td,tkdf->tkf", x, wu[s]))
-    y = jnp.einsum("tkf,tkfd->tkd", h, wd[s]).astype(jnp.float32)
-    w = jnp.where(slot_ids >= 0, weights, 0.0).astype(jnp.float32)
-    return jnp.sum(y * w[..., None], axis=1).astype(x.dtype)
+        h = jax.nn.gelu(jax.lax.ragged_dot(xs, wu, group_sizes))
+    ys = jax.lax.ragged_dot(h, wd, group_sizes).astype(jnp.float32)
+    wf = jnp.where(flat >= 0, weights.reshape(-1), 0.0
+                   ).astype(jnp.float32)[order]
+    y = jnp.zeros((T, x.shape[1]), jnp.float32).at[order // k].add(
+        ys * wf[:, None])
+    return y.astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -10,8 +10,9 @@ spmoe``, ...).
 
 One Engine serves all ``--requests`` requests, so request 2+ hits a warm
 expert cache (watch ``hit_rate`` climb).  ``--concurrency N`` decodes up
-to N requests at once on that one warm cache — the round-robin session
-scheduler interleaves one committed verify block per session per turn, and
+to N requests at once on that one warm cache — each scheduling round
+batches the ready sessions' verify blocks into ONE fused kernel launch
+(one routing pass, ≤2 host syncs per round instead of 2 per session), and
 every stream stays bit-identical to serving it alone.  ``--stream`` prints
 tokens as each verify block commits (prefixed with the request id when
 concurrent); ``--stop-token`` ends a request early on every decode x
@@ -69,7 +70,12 @@ def main():
     ap.add_argument("--requests", type=int, default=1)
     ap.add_argument("--concurrency", type=int, default=1,
                     help="requests decoded concurrently on the one warm "
-                         "cache (round-robin sessions; 1 = serial)")
+                         "cache (1 = serial).  Each scheduling round "
+                         "batches the ready sessions' verify blocks into "
+                         "ONE fused kernel launch — one routing pass and "
+                         "<=2 host syncs per round instead of per session "
+                         "— while every stream stays bit-identical to "
+                         "serving it alone")
     ap.add_argument("--draft-len", type=int, default=4)
     ap.add_argument("--cache-slots", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref as R
+from repro.kernels.cache_moe import cache_moe, compact_occupied_slots
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gemm import moe_gemm
@@ -94,6 +95,82 @@ def test_moe_gemm_sweep(E, C, d, f, bc, bf, bd, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                atol=_tol(dtype), rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# occupancy-compacted cache_moe: the slot grid covers min(S, T·k) occupied
+# slots, not the whole pool — swept against the ragged cache_moe_ref oracle
+# ---------------------------------------------------------------------------
+
+def _cache_moe_inputs(T, k, S, d, f, seed, slot_ids):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (S, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (S, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (S, f, d)) * 0.1
+    weights = jax.random.uniform(ks[4], (T, k))
+    return x, wg, wu, wd, jnp.asarray(slot_ids, jnp.int32), weights
+
+
+@pytest.mark.parametrize("case", ["empty_pool", "one_slot", "fully_occupied",
+                                  "random_miss"])
+def test_cache_moe_occupancy_compaction(case):
+    """Large pool (S ≫ T·k, compaction active): empty occupancy (all
+    slot_ids < 0), one occupied slot, a fully occupied small pool (S ≤ T·k,
+    compaction a no-op), and random routing with misses all match the
+    ragged oracle."""
+    T, k, d, f = 4, 2, 32, 64
+    if case == "empty_pool":
+        S, slot_ids = 64, np.full((T, k), -1, np.int64)
+    elif case == "one_slot":
+        S, slot_ids = 64, np.full((T, k), 37, np.int64)
+    elif case == "fully_occupied":
+        S = 4                              # S ≤ T·k: no compaction branch
+        slot_ids = np.arange(T * k).reshape(T, k) % S
+    else:
+        S = 64
+        slot_ids = np.random.default_rng(0).integers(-1, S, size=(T, k))
+    x, wg, wu, wd, si, w = _cache_moe_inputs(T, k, S, d, f, 11, slot_ids)
+    out = cache_moe(x, si, w, wu, wd, wg, interpret=True)
+    ref = R.cache_moe_ref(x, si, w, wu, wd, wg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-2)
+    if case == "empty_pool":
+        assert bool(jnp.all(out == 0))
+
+
+def test_compact_occupied_slots_mapping():
+    """The compaction helper renumbers densely, keeps misses at -1, and
+    gathers exactly the occupied slots' weight rows."""
+    S, M = 32, 6
+    slot_ids = jnp.asarray([[30, -1], [7, 30], [19, 7]], jnp.int32)  # T·k=6
+    wu = jnp.arange(S, dtype=jnp.float32)[:, None, None] * jnp.ones((S, 2, 3))
+    comp, wu_c, wd_c, wg_c = compact_occupied_slots(slot_ids, wu, wu, None, M)
+    comp = np.asarray(comp)
+    assert wg_c is None and wu_c.shape == (M, 2, 3)
+    # occupied slots {7, 19, 30} -> dense ranks {0, 1, 2} in slot order
+    want = np.asarray([[2, -1], [0, 2], [1, 0]])
+    np.testing.assert_array_equal(comp, want)
+    np.testing.assert_array_equal(np.asarray(wu_c[:3, 0, 0]), [7., 19., 30.])
+
+
+def test_cache_moe_compaction_matches_uncompacted():
+    """Same routing computed against the full pool and against a pool just
+    large enough to skip compaction must agree (the compacted grid is
+    numerically transparent)."""
+    T, k, d, f = 4, 2, 32, 32
+    rng = np.random.default_rng(3)
+    small_S = T * k                        # S ≤ T·k: no compaction
+    slot_ids = rng.integers(-1, small_S, size=(T, k))
+    x, wg, wu, wd, si, w = _cache_moe_inputs(T, k, small_S, d, f, 5, slot_ids)
+    big_S = 48                             # same slots embedded in a big pool
+    wg_b = jnp.concatenate([wg, jnp.zeros((big_S - small_S, d, f))])
+    wu_b = jnp.concatenate([wu, jnp.zeros((big_S - small_S, d, f))])
+    wd_b = jnp.concatenate([wd, jnp.zeros((big_S - small_S, f, d))])
+    small = cache_moe(x, si, w, wu, wd, wg, interpret=True)
+    big = cache_moe(x, si, w, wu_b, wd_b, wg_b, interpret=True)
+    np.testing.assert_allclose(np.asarray(small), np.asarray(big),
+                               atol=1e-5, rtol=1e-4)
 
 
 @pytest.mark.parametrize("b,s,h,p,n,chunk", [

@@ -164,6 +164,31 @@ def test_table_array_tracks_inserts_and_evictions():
     assert (tdev >= 0).sum() == len(cache.table)
 
 
+def test_table_scatter_trace_count_bounded():
+    """Regression (ROADMAP open item): the jitted page-table scatter used to
+    retrace per distinct scatter length, so trace-cache growth scaled with
+    the number of distinct insert+eviction sizes.  Lengths are now padded to
+    powers of two — many distinct sizes may compile at most one executable
+    per bucket — and the padding (a repeated final triple) must keep the
+    device mirror exact."""
+    cache, _, L, E = _mk_cache(slots=8, L=6, E=9)
+    rng = np.random.default_rng(0)
+    seen_lengths = set()
+    for _ in range(60):
+        n = int(rng.integers(1, 7))
+        keys = [(int(rng.integers(L)), int(rng.integers(E)))
+                for _ in range(n)]
+        arrays = {"w": np.ones((len(keys), 2, 2), np.float32)}
+        cache.insert(keys, arrays)
+        seen_lengths.add(n)
+        assert cache.check_invariants()    # padding kept table_dev exact
+    assert len(seen_lengths) >= 5, "sweep failed to vary insert sizes"
+    # evictions extend scatter lengths further; buckets {1,2,4,8,16} bound
+    # the executables regardless
+    assert cache.table_scatter_traces <= 5, \
+        f"scatter retraced per length: {cache.table_scatter_traces} traces"
+
+
 def test_table_array_consistent_under_concurrent_prefetch():
     """Prefetch worker + compute loop hammer the cache concurrently; the
     invariants (incl. the device table mirror) must hold throughout."""

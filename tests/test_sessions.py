@@ -149,16 +149,19 @@ def test_metrics_isolated_under_interleaving(ms):
 # ---------------------------------------------------------------------------
 
 def test_sync_contract_two_syncs_per_block_with_concurrency(ms):
-    """With an ample cache and two interleaved sessions, every fast verify
-    block still performs exactly ONE host sync inside _verify_block (the
-    all_hit scalar) — the ≤2-per-block contract with the accept/reject
-    readback — and both streams stay lossless."""
+    """With an ample cache and two interleaved sessions: solo fast blocks
+    (the prefills) still perform exactly ONE host sync inside _verify_block,
+    and every batched decode ROUND — which commits BOTH sessions' verify
+    blocks in one fused dispatch — performs ≤2 host syncs total, i.e. the
+    old 2-per-block contract became 2-per-round.  Both streams stay
+    lossless."""
     _, _, _, _, prompts, refs = ms
     with _engine(ms) as eng:
         rt = eng.runtime
         eng.serve_all(_reqs(prompts), concurrency=2)    # warm cache + arming
-        per_block = []
+        per_block, per_round = [], []
         orig_vb = rt._verify_block
+        orig_turns = rt.session_turns
 
         def spy_vb(tokens, pos, tcache):
             before_sync, before_fast = rt.host_syncs, rt.fast_blocks
@@ -167,14 +170,27 @@ def test_sync_contract_two_syncs_per_block_with_concurrency(ms):
                               rt.fast_blocks > before_fast))
             return out
 
+        def spy_turns(sts):
+            before_sync, before_fast = rt.host_syncs, rt.fast_blocks
+            out = orig_turns(sts)
+            per_round.append((rt.host_syncs - before_sync,
+                              rt.fast_blocks - before_fast))
+            return out
+
         rt._verify_block = spy_vb
+        rt.session_turns = spy_turns
         res = eng.serve_all(_reqs(prompts), concurrency=2)
         rt._verify_block = orig_vb
+        rt.session_turns = orig_turns
     for r, ref in zip(res, refs):
         assert r.tokens == ref
     fast = [s for s, is_fast in per_block if is_fast]
-    assert fast, "fast path never engaged under concurrency"
+    assert fast, "solo fast path never engaged (prefill blocks)"
     assert max(fast) == 1, f"fast block synced more than once: {per_block}"
+    fused = [(s, b) for s, b in per_round if b == 2]
+    assert fused, "no round committed both sessions' blocks fused"
+    assert max(s for s, _ in fused) <= 2, \
+        f"a fused round exceeded 2 host syncs: {per_round}"
     assert all(r.metrics.fast_fallbacks == 0 for r in res)
 
 
@@ -247,6 +263,60 @@ def test_prefetcher_submit_after_stop_executes_inline_and_drains(ms):
     pf.drain()                          # used to hang forever
     assert time.perf_counter() - t0 < 2.0
     assert pf.loaded_count == 2
+
+
+# ---------------------------------------------------------------------------
+# per-session I/O is attributed to the task OWNER, not the turn it lands in
+# ---------------------------------------------------------------------------
+
+def test_prefetch_io_attributed_to_task_owner(ms):
+    """Regression (ROADMAP open item): with an async worker, a prefetch load
+    could land between two sessions' turns and be charged — via the
+    turn-window counter delta — to the wrong session's ledger.  I/O now
+    rides on the task: a slowed store guarantees the two sessions' prefetch
+    waves interleave across turn boundaries, and each session's ledger must
+    equal exactly the loads of the tasks IT submitted, with every eviction
+    owned by exactly one session."""
+    _, _, _, _, prompts, refs = ms
+    with _engine(ms, slots=24) as eng:       # tight-ish: eviction pressure
+        rt = eng.runtime
+        orig_fetch = rt.store.fetch
+
+        def slow_fetch(keys):
+            time.sleep(0.02)                 # push completion past the turn
+            return orig_fetch(keys)
+
+        rt.store.fetch = slow_fetch
+        owned = {}
+        orig_prefetch = rt._prefetch
+
+        def spy_prefetch(st, keys):
+            n0 = len(st.inflight)
+            orig_prefetch(st, keys)
+            owned.setdefault(id(st), []).extend(st.inflight[n0:])
+
+        rt._prefetch = spy_prefetch
+        st1 = rt.start_session(prompts[0], TOK)
+        st2 = rt.start_session(prompts[1], TOK)
+        while not (st1.finished and st2.finished):   # interleave waves
+            if not st1.finished:
+                rt.session_turn(st1)
+            if not st2.finished:
+                rt.session_turn(st2)
+        rt.finish_session(st1)
+        rt.finish_session(st2)
+        rt._prefetch = orig_prefetch
+        rt.store.fetch = orig_fetch
+        for st in (st1, st2):
+            want = sum(t.stats.get("prefetched", 0)
+                       for t in owned.get(id(st), []))
+            assert st.io["prefetched"] == want
+        assert st1.io["prefetched"] > 0 and st2.io["prefetched"] > 0
+        # totals tile: every load and every eviction has exactly one owner
+        assert st1.io["prefetched"] + st2.io["prefetched"] == \
+            rt.prefetcher.loaded_count
+        assert st1.io["evictions"] + st2.io["evictions"] == \
+            rt.cache.evictions
 
 
 # ---------------------------------------------------------------------------
