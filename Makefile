@@ -1,7 +1,7 @@
 # Entry points the CI workflow and humans share.  PYTHONPATH=src is the
 # repo convention (no package install step; the container already has jax).
 
-.PHONY: test test-fast test-engine test-serving bench-offload bench-sessions
+.PHONY: test test-fast test-engine test-serving test-chaos bench-offload bench-sessions bench-chaos
 
 test:            ## tier-1 verify: the FULL suite (~13 min on the container)
 	PYTHONPATH=src python -m pytest -x -q
@@ -15,8 +15,14 @@ test-engine:     ## pure serving-API signal (~3 min)
 test-serving:    ## full serving surface: engine + sessions + batched rounds
 	PYTHONPATH=src python -m pytest -x -q tests/test_engine.py tests/test_sessions.py tests/test_batched_verify.py
 
+test-chaos:      ## resilience: fault-injected serving + supervised prefetch (~2 min)
+	PYTHONPATH=src python -m pytest -x -q tests/test_chaos.py
+
 bench-offload:   ## verification hot-path micro-bench -> BENCH_offload.json
 	PYTHONPATH=src python -m benchmarks.run --mode offload
 
 bench-sessions:  ## serial vs concurrent sessions -> BENCH_sessions.json
 	PYTHONPATH=src python -m benchmarks.run --mode sessions
+
+bench-chaos:     ## fault-rate degradation curve + lossless gate -> BENCH_chaos.json
+	PYTHONPATH=src python -m benchmarks.run --mode chaos

@@ -65,6 +65,28 @@ def main():
               f"{batch[0].tokens == ref.tolist()} | per-request hit_rate: "
               f"{[f'{r.metrics.hit_rate:.2%}' for r in batch]}")
 
+    # chaos drill: the same engine config under seeded fault injection —
+    # transient I/O errors, payload corruption (checksum-quarantined) and
+    # prefetch-worker kills.  Retries + the supervised worker + the
+    # graceful-degradation ladder absorb every injected fault; the stream
+    # stays bit-identical, only slower.  (CLI: repro.launch.serve --chaos;
+    # counters: prefetch_errors/retries/checksum_failures/worker_restarts/
+    # degraded_rounds/io_errors.)
+    from repro.core.chaos import ChaosConfig
+    chaos_cfg = EngineConfig(model=cfg, decode="sd", offload="spmoe",
+                             cache_slots=8, draft_len=4, max_seq=64,
+                             chaos=ChaosConfig(seed=7, fetch_error_rate=0.2,
+                                               corrupt_rate=0.1,
+                                               kill_worker_every=5))
+    with Engine(chaos_cfg, tparams) as eng:
+        res = eng.submit(Request(prompt=prompt, max_new_tokens=24))
+        c = eng.runtime.counters()
+        print(f"chaos drill lossless: {res.tokens == ref.tolist()} "
+              f"(retries={c['prefetch_retries']} "
+              f"checksum_failures={c['checksum_failures']} "
+              f"worker_restarts={c['worker_restarts']} "
+              f"health={eng.runtime.health()})")
+
 
 if __name__ == "__main__":
     main()

@@ -56,9 +56,13 @@ class ExpertCache:
 
     def __init__(self, num_slots: int, buffer_shapes: Dict[str, tuple],
                  dtype=jnp.bfloat16,
-                 table_shape: Optional[Tuple[int, int]] = None):
+                 table_shape: Optional[Tuple[int, int]] = None,
+                 chaos=None):
         self.num_slots = num_slots
         self.dtype = dtype
+        # optional fault injector (core/chaos.py): inserts may raise an
+        # injected transient error BEFORE any bookkeeping mutates
+        self.chaos = chaos
         self.bufs = {name: jnp.zeros((num_slots,) + tuple(shape), dtype)
                      for name, shape in buffer_shapes.items()}
         self.table: Dict[ExpertKey, int] = {}
@@ -174,6 +178,11 @@ class ExpertCache:
         """
         if not keys:
             return []
+        if self.chaos is not None:
+            # injected transient insert failure, raised before the lock and
+            # before ANY bookkeeping — a failed insert leaves the cache
+            # exactly as it was, so the caller's retry is safe
+            self.chaos.on_insert(len(keys))
         with self.lock:
             if len(set(keys)) > self.num_slots:
                 raise ValueError(

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.chaos import ChaosConfig, ExpertLoadError
 from repro.core.cutoff import HardwareProfile
 from repro.core import sd as S
 
@@ -121,6 +122,19 @@ class EngineConfig:
     # session
     max_seq: int = 512
     precompile: bool = True             # trace fast verify path at init
+    # resilience plane (see core/chaos.py + the Prefetcher docstring):
+    # every knob defaults to today's behaviour — retries on transient I/O,
+    # no fault injection, checksums only when chaos is enabled
+    chaos: Optional[ChaosConfig] = None
+    prefetch_retries: int = 3           # per-task transient-I/O retry budget
+    retry_backoff_s: float = 0.002      # exponential backoff base
+    task_timeout_s: Optional[float] = None   # per prefetch-task deadline
+    drain_timeout_s: float = 30.0       # bound on per-session I/O waits
+    verify_payloads: Optional[bool] = None   # None -> on iff chaos enabled
+    max_worker_restarts: int = 3        # supervised-worker restart budget
+    fail_threshold: int = 3             # consecutive failures -> degraded
+    heartbeat_timeout_s: float = 10.0   # wedged-worker detection
+    io_retries: int = 3                 # on-demand (decode-critical) retries
 
     def __post_init__(self):
         self.decode = DecodePolicy(self.decode).value
@@ -137,6 +151,15 @@ class EngineConfig:
     @property
     def needs_draft(self) -> bool:
         return self.decode != DecodePolicy.GREEDY.value
+
+    @property
+    def resolved_verify_payloads(self) -> bool:
+        """Checksum verification of fetched payloads: explicit setting wins;
+        otherwise it is on exactly when fault injection is configured (a
+        chaos run without checksums could insert corrupted weights)."""
+        if self.verify_payloads is not None:
+            return self.verify_payloads
+        return self.chaos is not None and self.chaos.enabled
 
     def resolved_draft(self) -> ModelConfig:
         return self.draft if self.draft is not None \
@@ -157,11 +180,15 @@ class Request:
     """One generation request.  ``prompt`` is a ``[1, P]`` int array (or a
     plain list of token ids).  Generation ends after ``max_new_tokens``
     tokens or — on every decode × offload combination identically — right
-    after the first emitted token in ``stop_tokens``."""
+    after the first emitted token in ``stop_tokens``.  ``deadline_s`` is a
+    per-request wall-clock budget measured from the first decode turn: an
+    expired session is retired with ``finish_reason="deadline"`` (already-
+    committed tokens are kept) instead of wedging its batchmates' rounds."""
     prompt: Any
     max_new_tokens: int = 32
     stop_tokens: Sequence[int] = ()
     request_id: Optional[str] = None
+    deadline_s: Optional[float] = None
 
     def prompt_array(self) -> jax.Array:
         p = self.prompt
@@ -180,7 +207,11 @@ class Request:
 RUNTIME_COUNTER_KEYS = ("lookups", "hits", "on_demand_loads", "prefetched",
                         "evictions", "prefetch_evicted_unused", "host_syncs",
                         "verify_blocks", "fast_blocks", "fast_fallbacks",
-                        "iterations", "drafted", "accepted")
+                        "iterations", "drafted", "accepted",
+                        # resilience plane (prefetcher/store health)
+                        "prefetch_errors", "prefetch_retries",
+                        "checksum_failures", "worker_restarts",
+                        "degraded_rounds", "io_errors")
 
 # counter fields that accumulate / subtract when combining Metrics
 _COUNTERS = ("requests", "tokens") + RUNTIME_COUNTER_KEYS
@@ -209,6 +240,13 @@ class Metrics:
     verify_blocks: int = 0
     fast_blocks: int = 0
     fast_fallbacks: int = 0
+    # resilience plane (zero on a healthy run)
+    prefetch_errors: int = 0
+    prefetch_retries: int = 0
+    checksum_failures: int = 0
+    worker_restarts: int = 0
+    degraded_rounds: int = 0
+    io_errors: int = 0
     cutoff_layer: int = -1              # configuration echo, not a counter
 
     # ------------------------------------------------------------- derived
@@ -252,8 +290,13 @@ class Metrics:
 @dataclass
 class GenerationResult:
     """Outcome of one request: the committed tokens, why generation stopped
-    (``"length"``, ``"stop"``, or ``"aborted"`` when the consumer abandoned
-    the stream), and that request's Metrics delta."""
+    (``"length"``, ``"stop"``, ``"aborted"`` when the consumer abandoned
+    the stream, ``"deadline"`` when the request's wall-clock budget
+    expired, ``"cancelled"`` for an explicit :meth:`Session.cancel`, or
+    ``"io_error"`` when the offload plane could not load an expert even
+    synchronously — the degradation ladder's final rung; committed tokens
+    are always a prefix of the fault-free stream, never wrong), and that
+    request's Metrics delta."""
     tokens: List[int]
     finish_reason: str
     metrics: Metrics
@@ -310,10 +353,32 @@ class Session:
         self.emitted: List[int] = []
         self.wall = 0.0                 # decode-side time, not consumer time
         self.result: Optional[GenerationResult] = None
+        # per-request deadline: armed on the first decode turn so queueing
+        # time behind a long backlog doesn't consume the request's budget
+        self._deadline: Optional[float] = None
 
     @property
     def done(self) -> bool:
         return self.result is not None
+
+    def expired(self) -> bool:
+        """True once the request's wall-clock budget (deadline_s) is spent.
+        The clock arms on the first decode turn, so time spent queued
+        behind a backlog doesn't count against the request."""
+        return self._deadline is not None and time.monotonic() > self._deadline
+
+    def _arm_deadline(self):
+        if self._deadline is None and self.request.deadline_s is not None:
+            self._deadline = time.monotonic() + self.request.deadline_s
+
+    def cancel(self, reason: str = "cancelled"):
+        """Retire an unfinished session early (idempotent).  The decode side
+        is closed — this session's in-flight prefetch tasks are waited out
+        (bounded) and its counters committed — so batchmates and the warm
+        engine are unaffected: the session falls out of the scheduling
+        round the way a finished one does."""
+        if not self.done:
+            self._finalize(reason)
 
     def _step(self, fn):
         """Run one decode-side step under this session's wall clock and
@@ -353,24 +418,42 @@ class Session:
 
     def turn(self) -> Optional[List[int]]:
         """Advance one committed verify block.  Returns the newly committed
-        tokens (truncated right after a stop token) or None when done."""
+        tokens (truncated right after a stop token) or None when done.  An
+        expired deadline retires the session (``finish_reason="deadline"``)
+        and an unrecoverable expert load — the degradation ladder's final
+        rung — retires it with ``"io_error"``; neither raises."""
         if self.done:
             return None
-        return self._commit_chunk(self._step(self._advance))
+        if self.expired():
+            self._finalize("deadline")
+            return None
+        self._arm_deadline()
+        try:
+            chunk = self._step(self._advance)
+        except ExpertLoadError:
+            self._finalize("io_error")
+            return None
+        return self._commit_chunk(chunk)
 
-    def deliver(self, chunk: Optional[List[int]], delta: Dict[str, int],
+    def deliver(self, chunk, delta: Dict[str, int],
                 wall: float) -> Optional[List[int]]:
         """Commit a chunk produced by a batched cross-session round
         (``OffloadEngine.session_turns``): fold the round's per-session
         counter delta and this session's own decode wall time (measured
         per-phase by the runtime — a batchmate's miss fallback is not
         charged here) into the ledger, then run the same
-        stop-token/finalize logic as a solo :meth:`turn`."""
+        stop-token/finalize logic as a solo :meth:`turn`.  A chunk that is
+        an :class:`ExpertLoadError` (this session's block could not load
+        its experts even synchronously) retires the session with
+        ``finish_reason="io_error"`` — its batchmates are untouched."""
         if self.done:
             return None
         for k in self.ledger:
             self.ledger[k] += delta.get(k, 0)
         self.wall += wall
+        if isinstance(chunk, ExpertLoadError):
+            self._finalize("io_error")
+            return None
         return self._commit_chunk(chunk)
 
     def _commit_chunk(self, chunk: Optional[List[int]]
@@ -532,12 +615,20 @@ class Engine:
             while active or waiting:
                 while waiting and len(active) < concurrency:
                     active.append(waiting.pop(0))
+                # deadline sweep: an expired session falls out of the round
+                # the way a finished one does — it is retired here (its own
+                # prefetch tasks waited out, counters committed) instead of
+                # wedging its batchmates' fused verify dispatch
+                for _, s in active:
+                    if not s.done and s.expired():
+                        s.cancel("deadline")
                 # batched cross-session round: every started runtime session
                 # advances through ONE fused verify dispatch (one routing
                 # pass / table gather / cache_moe launch, ≤2 host syncs for
                 # the whole round); fresh admissions run their prefill solo
                 # first, and non-offload engines always turn solo.
-                round_sts = [s for _, s in active if s.dstate is not None]
+                round_sts = [s for _, s in active
+                             if not s.done and s.dstate is not None]
                 delivered: Dict[int, Optional[List[int]]] = {}
                 if round_sts:
                     res = self.runtime.session_turns(

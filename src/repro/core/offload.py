@@ -13,17 +13,29 @@ The staging ring is **thread-local**: the prefetch worker and the compute
 loop both call ``fetch`` concurrently (worker prefetch vs. the slow path's
 miss waves), and a shared ring would let one thread's gather overwrite the
 other's staged weights before the device copy happens.
+
+Payload integrity: the canonical host arrays are the ground truth, and
+every (layer, expert) has a lazily-memoized CRC32 over its weight tensors.
+``fetch_verified`` re-checksums the *staged* copy against the canonical
+sum and raises :class:`~repro.core.chaos.PayloadCorruption` on mismatch —
+a corrupted transfer (chaos-injected or real) is quarantined in staging
+and never reaches the device cache; the caller's retry loop refetches.
+An optional :class:`~repro.core.chaos.ChaosInjector` makes ``fetch``
+fallible on purpose (transient errors, latency spikes, staged-byte
+corruption) for resilience tests and the ``--mode chaos`` benchmark.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Sequence, Tuple
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cache import ExpertKey
+from repro.core.chaos import ChaosInjector, PayloadCorruption
 
 _NUM_STAGING = 2          # double buffer: gather batch i+1 while i transfers
 
@@ -32,7 +44,8 @@ class HostExpertStore:
     """Extracts per-(layer, expert) weights from a target model's params and
     keeps them as host numpy arrays."""
 
-    def __init__(self, cfg: ModelConfig, params, staging_batch: int = 16):
+    def __init__(self, cfg: ModelConfig, params, staging_batch: int = 16,
+                 chaos: Optional[ChaosInjector] = None):
         assert cfg.is_moe, "HostExpertStore requires an MoE config"
         self.cfg = cfg
         moe = params["layers"]["moe"]        # stacked [L_moe, E, ...]
@@ -48,6 +61,10 @@ class HostExpertStore:
         # demand, never shrunk)
         self._stage_batch = max(1, staging_batch)
         self._tls = threading.local()
+        self.chaos = chaos
+        self.checksum_failures = 0         # staged payloads that failed CRC
+        self._sums: Dict[ExpertKey, int] = {}   # canonical CRC32 per key
+        self._sums_lock = threading.Lock()
 
     def _alloc_stage(self, cap: int) -> Dict[str, np.ndarray]:
         return {n: np.empty((cap,) + self._store[n].shape[2:],
@@ -76,6 +93,8 @@ class HostExpertStore:
         ``fetch`` (double buffering) — long enough for
         ``ExpertCache.insert`` to dispatch the H2D transfer.
         """
+        if self.chaos is not None:
+            self.chaos.on_fetch(len(keys))     # may spike (sleep) or raise
         n_keys = len(keys)
         tls = self._thread_ring(n_keys)
         stage = tls.stages[tls.i]
@@ -86,7 +105,52 @@ class HostExpertStore:
         for n in self.names:
             np.take(self._flat[n], idx, axis=0, out=stage[n][:n_keys])
             out[n] = stage[n][:n_keys]
+        if self.chaos is not None:
+            self.chaos.maybe_corrupt(out)      # poisons the STAGED copy only
         return out
+
+    # ------------------------------------------------------------- integrity
+    def expected_checksum(self, key: ExpertKey) -> int:
+        """Canonical CRC32 of one expert's weight tensors (memoized — the
+        host store is immutable for the engine's lifetime)."""
+        with self._sums_lock:
+            s = self._sums.get(key)
+        if s is None:
+            i = key[0] * self.num_experts + key[1]
+            s = 0
+            for n in self.names:
+                s = zlib.crc32(self._flat[n][i].tobytes(), s)
+            with self._sums_lock:
+                self._sums[key] = s
+        return s
+
+    def payload_checksum(self, arrays: Dict[str, np.ndarray], i: int) -> int:
+        """CRC32 of row ``i`` of a fetched batch, in canonical name order."""
+        s = 0
+        for n in self.names:
+            s = zlib.crc32(np.ascontiguousarray(arrays[n][i]).tobytes(), s)
+        return s
+
+    def verify_payload(self, keys: Sequence[ExpertKey],
+                       arrays: Dict[str, np.ndarray]) -> List[int]:
+        """Indices of fetched rows whose staged bytes do not match the
+        canonical checksum (empty = clean batch)."""
+        return [i for i, k in enumerate(keys)
+                if self.payload_checksum(arrays, i) != self.expected_checksum(k)]
+
+    def fetch_verified(self, keys: Sequence[ExpertKey]
+                       ) -> Dict[str, np.ndarray]:
+        """``fetch`` + checksum verification: a corrupted staged payload is
+        quarantined (never returned for insertion) by raising
+        :class:`PayloadCorruption` — the caller's retry loop refetches."""
+        arrays = self.fetch(keys)
+        bad = self.verify_payload(keys, arrays)
+        if bad:
+            self.checksum_failures += len(bad)
+            raise PayloadCorruption(
+                f"checksum mismatch on fetched experts "
+                f"{[tuple(keys[i]) for i in bad]}")
+        return arrays
 
     def strip_experts(self, params):
         """Return params with expert tensors removed (host-only now) — the

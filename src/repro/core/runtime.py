@@ -92,6 +92,7 @@ via task-owner stats, not to whoever's turn an async load landed in.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -102,6 +103,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import ExpertCache, ExpertKey
+from repro.core.chaos import ChaosInjector, ExpertLoadError
 from repro.core.cutoff import solve_cutoff
 from repro.core.engine import (RUNTIME_COUNTER_KEYS, DecodePolicy,
                                EngineConfig)
@@ -188,15 +190,28 @@ class OffloadEngine:
             self.draft = None
         self.draft_cfg = self.draft.cfg if self.draft is not None else None
         self.tparams, self.dparams = tparams, dparams
-        self.store = HostExpertStore(cfg, tparams)
+        # resilience plane: one seeded fault injector shared by the store,
+        # the cache and the prefetcher (None = chaos off, zero overhead)
+        self.chaos = ChaosInjector(config.chaos) \
+            if config.chaos is not None and config.chaos.enabled else None
+        self.store = HostExpertStore(cfg, tparams, chaos=self.chaos)
         self.cache = ExpertCache(
             config.cache_slots, self.store.buffer_shapes(),
             jnp.dtype(cfg.dtype),
-            table_shape=(self.store.num_layers, cfg.num_experts))
+            table_shape=(self.store.num_layers, cfg.num_experts),
+            chaos=self.chaos)
         mode = config.prefetch_mode if self.policy in ("spmoe", "moe-infinity") \
             else ("vanilla" if self.policy == "adapmoe" else "off")
-        self.prefetcher = Prefetcher(self.store, self.cache, mode,
-                                     config.batched_io)
+        self.prefetcher = Prefetcher(
+            self.store, self.cache, mode, config.batched_io,
+            retries=config.prefetch_retries,
+            backoff_s=config.retry_backoff_s,
+            task_timeout_s=config.task_timeout_s,
+            verify=config.resolved_verify_payloads,
+            heartbeat_timeout_s=config.heartbeat_timeout_s,
+            max_worker_restarts=config.max_worker_restarts,
+            fail_threshold=config.fail_threshold,
+            chaos=self.chaos)
         self.k = config.k_prefetch if config.k_prefetch is not None \
             else cfg.num_experts_per_tok
         self.predictor = ExpertPredictor(cfg, tparams, self.k)
@@ -233,6 +248,17 @@ class OffloadEngine:
         # launch per all-hit round regardless of how many sessions it served.
         self.verify_rounds = 0
         self.round_launches = 0
+        # graceful-degradation ladder: while the prefetch plane is unhealthy
+        # (worker dead beyond its restart budget, wedged past its heartbeat,
+        # or circuit-breaker open on failure pressure) the offload policy
+        # steps down to on-demand synchronous loading — _prefetch() submits
+        # nothing, the slow path's miss waves carry the load — and steps
+        # back up when health returns.  Tokens are never wrong, only slower;
+        # only a synchronous load that ITSELF exhausts its retry budget ends
+        # the one owning request with finish_reason="io_error".
+        self._degraded = False
+        self.degraded_rounds = 0
+        self.io_errors = 0
         # adaptive fast-path arming is per-session (DecodeState.fast_ok):
         # cold caches go straight to the slow (miss-resolving) path; a
         # zero-miss slow block re-arms, and after a misprediction
@@ -503,6 +529,61 @@ class OffloadEngine:
         self.layer_hits += len(hits)
         return hits, misses
 
+    # -------------------------------------------------------------- resilience
+    def _check_health(self):
+        """One degradation-ladder step, run once per scheduling round:
+        probe-and-repair the prefetch plane (restart a dead worker within
+        budget, release stranded tasks past it) and step the offload policy
+        down to on-demand synchronous loading while the plane is unhealthy.
+        Health returning steps back up automatically — ``_degraded`` is
+        recomputed every round, never latched."""
+        if self.prefetcher.mode == "off":
+            self._degraded = False
+        else:
+            self._degraded = not self.prefetcher.revive()
+
+    def health(self) -> str:
+        """Ladder position: ``"healthy"`` (prefetch plane trusted),
+        ``"degraded"`` (on-demand synchronous loads; expected to recover),
+        or ``"failed"`` (worker permanently gone — restart budget spent)."""
+        if not self._degraded:
+            return "healthy"
+        pf = self.prefetcher
+        if pf.mode == "worker" and not pf.worker_alive() \
+                and pf.worker_restarts >= pf.max_worker_restarts:
+            return "failed"
+        return "degraded"
+
+    def _load_wave(self, wave: List[ExpertKey], st: DecodeState) -> List[int]:
+        """Decode-critical on-demand load: fetch + insert one miss wave
+        under a bounded retry budget (``io_retries``), with checksum
+        verification when enabled.  The FINAL attempt runs inside the chaos
+        injector's ``calm()`` scope, so *injected* faults can never exhaust
+        this budget — losslessness under chaos is a guarantee.  A real
+        fault that survives every retry raises :class:`ExpertLoadError`:
+        the degradation ladder's last rung, ending the one owning request
+        with ``finish_reason="io_error"`` (never wrong tokens)."""
+        attempts = self.config.io_retries + 1
+        verify = self.prefetcher.verify
+        last: Optional[BaseException] = None
+        for a in range(attempts):
+            calm = self.chaos.calm() if self.chaos is not None \
+                and a == attempts - 1 else contextlib.nullcontext()
+            try:
+                with calm:
+                    arrays = self.store.fetch_verified(wave) if verify \
+                        else self.store.fetch(wave)
+                    return self.cache.insert(wave, arrays, mark_used=True,
+                                             stats=st.io)
+            except OSError as e:           # ChaosError/PayloadCorruption too
+                last = e
+                if a < attempts - 1:
+                    time.sleep(self.config.retry_backoff_s * (2 ** a))
+        self.io_errors += 1
+        raise ExpertLoadError(
+            f"on-demand load of {len(wave)} experts failed after "
+            f"{attempts} attempts: {last}") from last
+
     def _verify_block(self, tokens: jax.Array, pos: int, tcache):
         """Layer-wise target forward with cache-aware expert compute.
         tokens: [1, N+1].  See module docstring for the fast/slow design.
@@ -582,9 +663,7 @@ class OffloadEngine:
                 wave_size = max(1, self.cache.num_slots)
                 for w0 in range(0, len(misses), wave_size):
                     wave = misses[w0:w0 + wave_size]
-                    arrays = self.store.fetch(wave)
-                    slots = self.cache.insert(wave, arrays, mark_used=True,
-                                              stats=st.io)
+                    slots = self._load_wave(wave, st)
                     wave_lut = np.full((cfg.num_experts,), -1, np.int64)
                     for (key, s) in zip(wave, slots):
                         wave_lut[key[1]] = s
@@ -735,9 +814,19 @@ class OffloadEngine:
         early = self._turn_early(st)
         if early is not self._NEEDS_VERIFY:
             return early
+        self._check_health()                 # one ladder step per turn
+        if self._degraded:
+            self.degraded_rounds += 1
         self._st = st
         drafts, block = self._turn_draft(st)
-        tlogits, st.tcache = self._verify_block(block, st.pos, st.tcache)
+        try:
+            tlogits, st.tcache = self._verify_block(block, st.pos, st.tcache)
+        except ExpertLoadError:
+            # the ladder's last rung: this session cannot make progress
+            # without the failed load — end it (the caller maps this to
+            # finish_reason="io_error"); batchmates are unaffected.
+            st.finished = True
+            raise
         greedy = self._readback(jnp.argmax(tlogits, -1))[0]      # accept
         return self._turn_commit(st, drafts, greedy)
 
@@ -776,10 +865,14 @@ class OffloadEngine:
         time this session's own phases took — a fallback's slow re-run is
         charged to the session that missed, only the genuinely shared fused
         dispatch is split evenly across its members."""
-        chunks: List[Optional[List[int]]] = [None] * len(sts)
+        # a chunk is List[int], None (session done), or an ExpertLoadError
+        # instance (session ended by the ladder's io_error rung)
+        chunks: List[Any] = [None] * len(sts)
         deltas: List[Dict[str, int]] = [{} for _ in sts]
         walls: List[float] = [0.0] * len(sts)
         pend: List[Tuple[int, DecodeState, List[int], jax.Array]] = []
+        self._check_health()                 # one ladder step per round
+        degraded_counted = False
         for i, st in enumerate(sts):
             before = self.counters()
             t0 = time.perf_counter()
@@ -790,6 +883,12 @@ class OffloadEngine:
                 walls[i] += time.perf_counter() - t0
                 continue
             self._st = st
+            if self._degraded and not degraded_counted:
+                # charge the round's one degraded tick to the round's first
+                # verifying session, INSIDE its delta window, so the
+                # per-request ledgers still tile the cumulative counter
+                degraded_counted = True
+                self.degraded_rounds += 1
             drafts, block = self._turn_draft(st)
             deltas[i] = self._counter_delta(before)
             walls[i] += time.perf_counter() - t0
@@ -815,9 +914,17 @@ class OffloadEngine:
             t0 = time.perf_counter()
             self._st = st
             self.round_launches += 1
-            tlogits, st.tcache = self._verify_block(block, st.pos, st.tcache)
-            greedy = self._readback(jnp.argmax(tlogits, -1))[0]
-            chunks[i] = self._turn_commit(st, drafts, greedy)
+            try:
+                tlogits, st.tcache = self._verify_block(block, st.pos,
+                                                        st.tcache)
+                greedy = self._readback(jnp.argmax(tlogits, -1))[0]
+                chunks[i] = self._turn_commit(st, drafts, greedy)
+            except ExpertLoadError as e:
+                # ladder's last rung: end ONLY this session — batchmates'
+                # turns proceed.  The scheduler maps the exception chunk to
+                # finish_reason="io_error" (see engine.Session.deliver).
+                st.finished = True
+                chunks[i] = e
             self._merge_delta(deltas[i], self._counter_delta(before))
             walls[i] += time.perf_counter() - t0
         return list(zip(chunks, deltas, walls))
@@ -874,16 +981,25 @@ class OffloadEngine:
                 self._fast_hint = False
                 self.fast_fallbacks += 1
                 self.round_launches += 1
-                tlogits, st.tcache = self._verify_block_slow(
-                    blocks[j], st.pos, st.tcache)
-                g = self._readback(jnp.argmax(tlogits, -1))[0]
-                chunks[i] = self._turn_commit(st, drafts, g)
+                try:
+                    tlogits, st.tcache = self._verify_block_slow(
+                        blocks[j], st.pos, st.tcache)
+                    g = self._readback(jnp.argmax(tlogits, -1))[0]
+                    chunks[i] = self._turn_commit(st, drafts, g)
+                except ExpertLoadError as e:
+                    # end ONLY this session; its fused batchmates committed
+                    st.finished = True
+                    chunks[i] = e
             self._merge_delta(deltas[i], self._counter_delta(before))
             walls[i] += time.perf_counter() - t0
 
     def _prefetch(self, st: DecodeState, keys):
         """Submit a prefetch on behalf of ``st``, remembering the task so
-        retirement waits on exactly this session's in-flight I/O."""
+        retirement waits on exactly this session's in-flight I/O.  While the
+        ladder is degraded the prefetch plane is not trusted: submit nothing
+        and let the slow path's on-demand waves carry the load."""
+        if self._degraded:
+            return
         task = self.prefetcher.submit(keys)
         if task is not None:
             st.inflight.append(task)
@@ -907,9 +1023,13 @@ class OffloadEngine:
             self.layer_lookups += fast_active
             self.layer_hits += fast_active
         for task in st.inflight:       # worker sets done even on task error
-            task.done.wait()
-            for k, v in task.stats.items():   # owner-attributed I/O: the
-                st.io[k] = st.io.get(k, 0) + v  # task belongs to THIS session
+            # bounded wait that pumps the prefetcher's probe-and-repair
+            # (revive / abandon_pending), so a dead-and-unrestartable worker
+            # can never strand retirement on a task nobody will ever run
+            if self.prefetcher.wait_task(
+                    task, timeout=self.config.drain_timeout_s):
+                for k, v in task.stats.items():  # owner-attributed I/O: the
+                    st.io[k] = st.io.get(k, 0) + v  # task is THIS session's
         st.inflight.clear()
         self.cache.wait()              # dispatched H2D transfers have landed
 
@@ -986,6 +1106,13 @@ class OffloadEngine:
             "iterations": self.iterations,
             "drafted": self.drafted,
             "accepted": self.accepted,
+            # resilience plane (chaos-hardened serving)
+            "prefetch_errors": self.prefetcher.error_count,
+            "prefetch_retries": self.prefetcher.retry_count,
+            "checksum_failures": self.store.checksum_failures,
+            "worker_restarts": self.prefetcher.worker_restarts,
+            "degraded_rounds": self.degraded_rounds,
+            "io_errors": self.io_errors,
         }
 
     def _draft_taps_for_moe(self, taps: Dict[str, jax.Array]) -> jax.Array:
@@ -1009,6 +1136,8 @@ class OffloadEngine:
         self.verify_blocks = self.fast_blocks = self.fast_fallbacks = 0
         self.iterations = self.drafted = self.accepted = 0
         self.verify_rounds = self.round_launches = 0
+        self.degraded_rounds = self.io_errors = 0
+        self.store.checksum_failures = 0
         self.cache.reset_stats()
         self.prefetcher.reset_stats()
 

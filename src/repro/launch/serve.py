@@ -18,11 +18,27 @@ tokens as each verify block commits (prefixed with the request id when
 concurrent); ``--stop-token`` ends a request early on every decode x
 offload combination identically.
 
+Chaos hardening: ``--chaos`` turns on the seeded fault injector
+(core/chaos.py) against the expert I/O plane — transient fetch/insert
+errors, latency spikes, payload corruption, prefetch-worker kills — tuned
+with the ``--chaos-*`` rates.  Serving stays lossless (retry +
+checksum-quarantine + the graceful-degradation ladder absorb every injected
+fault); the per-request report grows the resilience counters
+(``prefetch_errors`` / ``prefetch_retries`` / ``checksum_failures`` /
+``worker_restarts`` / ``degraded_rounds`` / ``io_errors``) and the footer
+prints the engine's final health.  ``--deadline-s`` arms a per-request
+wall-clock budget (``finish_reason="deadline"`` when it expires).
+
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --decode sd --offload spmoe --tokens 32 --requests 2
 
     # four requests, two decoded concurrently per turn
     PYTHONPATH=src python -m repro.launch.serve --requests 4 --concurrency 2
+
+    # chaos drill: 10% fetch faults + corruption + worker kills, still lossless
+    PYTHONPATH=src python -m repro.launch.serve --requests 4 --concurrency 2 \
+        --chaos --chaos-fetch-error-rate 0.1 --chaos-corrupt-rate 0.05 \
+        --chaos-kill-every 5
 """
 from __future__ import annotations
 
@@ -30,6 +46,7 @@ import argparse
 
 import jax
 
+from repro.core.chaos import ChaosConfig
 from repro.configs.registry import get_config, get_draft_config
 from repro.core.engine import (DECODE_POLICIES, OFFLOAD_POLICIES, Engine,
                                EngineConfig, Request, derive_draft_config)
@@ -82,6 +99,30 @@ def main():
     ap.add_argument("--stop-token", type=int, action="append", default=None)
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as verify blocks commit")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget; an expired request "
+                         "retires with finish_reason=deadline")
+    chz = ap.add_argument_group(
+        "chaos", "seeded fault injection against the expert I/O plane "
+                 "(lossless by construction: retries, checksum quarantine "
+                 "and the degradation ladder absorb every injected fault)")
+    chz.add_argument("--chaos", action="store_true",
+                     help="enable the fault injector (core/chaos.py)")
+    chz.add_argument("--chaos-seed", type=int, default=0)
+    chz.add_argument("--chaos-fetch-error-rate", type=float, default=0.1,
+                     help="P(transient error) per HostExpertStore.fetch")
+    chz.add_argument("--chaos-insert-error-rate", type=float, default=0.0,
+                     help="P(transient error) per ExpertCache.insert")
+    chz.add_argument("--chaos-spike-rate", type=float, default=0.0,
+                     help="P(latency spike) per fetch")
+    chz.add_argument("--chaos-spike-ms", type=float, default=10.0,
+                     help="latency-spike duration (milliseconds)")
+    chz.add_argument("--chaos-corrupt-rate", type=float, default=0.0,
+                     help="P(staged-payload byte flip) per fetch — caught "
+                          "by checksum verification, never inserted")
+    chz.add_argument("--chaos-kill-every", type=int, default=0,
+                     help="kill the prefetch worker every Nth task "
+                          "(0 = never); the supervisor restarts it")
     args = ap.parse_args()
 
     decode, offload = args.decode, args.offload
@@ -97,15 +138,27 @@ def main():
     if offload is None:
         offload = "spmoe" if cfg.is_moe else "none"
 
+    chaos = None
+    if args.chaos:
+        chaos = ChaosConfig(
+            seed=args.chaos_seed,
+            fetch_error_rate=args.chaos_fetch_error_rate,
+            insert_error_rate=args.chaos_insert_error_rate,
+            spike_rate=args.chaos_spike_rate,
+            spike_s=args.chaos_spike_ms / 1e3,
+            corrupt_rate=args.chaos_corrupt_rate,
+            kill_worker_every=args.chaos_kill_every)
     max_seq = args.prompt_len + args.tokens + max(args.draft_len, 8) + 8
     config = EngineConfig(model=cfg, draft=dcfg, decode=decode,
                           offload=offload, cache_slots=args.cache_slots,
-                          draft_len=args.draft_len, max_seq=max_seq)
+                          draft_len=args.draft_len, max_seq=max_seq,
+                          chaos=chaos)
     prompts = [jax.random.randint(jax.random.PRNGKey(2 + i),
                                   (1, args.prompt_len), 0, cfg.vocab_size)
                for i in range(args.requests)]
     reqs = [Request(prompt=prompt, max_new_tokens=args.tokens,
                     stop_tokens=args.stop_token or (),
+                    deadline_s=args.deadline_s,
                     request_id=f"req-{i}")
             for i, prompt in enumerate(prompts)]
 
@@ -142,6 +195,21 @@ def main():
         cum = eng.metrics()
         print(f"cumulative: requests={cum.requests} tokens={cum.tokens} "
               f"hit_rate={cum.hit_rate:.3f} tpot={cum.tpot_wall * 1e3:.1f}ms")
+        if eng.runtime is not None:
+            # runtime counters, not the Metrics ledger: worker-thread
+            # increments landing between turn windows still show up here
+            c = eng.runtime.counters()
+            print(f"health: {eng.runtime.health()} "
+                  f"(prefetch_errors={c['prefetch_errors']} "
+                  f"retries={c['prefetch_retries']} "
+                  f"checksum_failures={c['checksum_failures']} "
+                  f"worker_restarts={c['worker_restarts']} "
+                  f"degraded_rounds={c['degraded_rounds']} "
+                  f"io_errors={c['io_errors']})")
+            if args.chaos and eng.runtime.chaos is not None:
+                inj = eng.runtime.chaos.injected
+                print("chaos injected:", " ".join(
+                    f"{k}={v}" for k, v in sorted(inj.items())))
 
 
 if __name__ == "__main__":

@@ -132,27 +132,49 @@ def run_supervised(train_loop: Callable[[int, Dict[str, int], int], Tuple[int, b
                    total_steps: int, initial_devices: int,
                    model_parallel: int,
                    injector: Optional[FailureInjector] = None,
-                   max_restarts: int = 10) -> SupervisorReport:
+                   max_restarts: int = 10,
+                   straggler: Optional[StragglerDetector] = None
+                   ) -> SupervisorReport:
     """Generic restart supervisor.
 
     ``train_loop(start_step, mesh_plan, devices)`` runs until completion or a
-    (simulated) failure, returning (last_checkpointed_step, finished).  The
-    supervisor re-plans the mesh and restarts from the checkpoint.
+    (simulated) failure, returning ``(last_checkpointed_step, finished)`` —
+    or ``(last_checkpointed_step, finished, observations)``, where
+    ``observations`` is an iterable of ``(host_id, step_time_s)`` pairs fed
+    through the :class:`StragglerDetector`.  The supervisor re-plans the mesh
+    and restarts from the checkpoint; hosts the detector flags are reported
+    in ``straggler_flags`` (previously always ``[]`` — ROADMAP known gap,
+    closed).
     """
     devices = initial_devices
     restarts = 0
     step = 0
+    detector = straggler if straggler is not None else StragglerDetector()
+    flagged: set = set()
     mesh_history = [plan_mesh(devices, model_parallel)]
+
+    def _step(start: int, plan: Dict[str, int], dev: int) -> Tuple[int, bool]:
+        out = train_loop(start, plan, dev)
+        if len(out) == 3:                  # (step, finished, observations)
+            s, fin, obs = out
+            for host_id, step_time in obs:
+                if detector.observe(int(host_id), float(step_time)):
+                    flagged.add(int(host_id))
+            return s, fin
+        return out
+
     while step < total_steps and restarts <= max_restarts:
         plan = plan_mesh(devices, model_parallel)
         if plan != mesh_history[-1]:
             mesh_history.append(plan)
-        step, finished = train_loop(step, plan, devices)
+        step, finished = _step(step, plan, devices)
         if finished:
-            return SupervisorReport(restarts, step, devices, [], mesh_history)
+            return SupervisorReport(restarts, step, devices, sorted(flagged),
+                                    mesh_history)
         restarts += 1
         if injector:
             surv = injector.check(step)
             if surv is not None:
                 devices = surv
-    return SupervisorReport(restarts, step, devices, [], mesh_history)
+    return SupervisorReport(restarts, step, devices, sorted(flagged),
+                            mesh_history)

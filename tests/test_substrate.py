@@ -174,6 +174,26 @@ def test_supervisor_restarts_and_finishes():
     assert log[-1][1]["data"] <= log[0][1]["data"]
 
 
+def test_run_supervised_reports_straggler_flags():
+    """Regression (ISSUE 7 satellite): run_supervised always returned
+    straggler_flags=[] — per-host step-time observations a train_loop
+    reports (3-tuple return) now thread through the StragglerDetector, and
+    the persistently slow host lands in the report.  The legacy 2-tuple
+    return keeps working."""
+
+    def train_loop(start, plan, devices):
+        # host 0 is healthy (warmup + baseline); host 1 is persistently slow
+        obs = [(0, 0.1)] * 8 + [(1, 10.0)] * 3
+        return 10, True, obs
+
+    rep = run_supervised(train_loop, 10, 8, 2)
+    assert rep.straggler_flags == [1]
+    assert rep.completed_steps == 10
+
+    rep2 = run_supervised(lambda s, p, d: (10, True), 10, 8, 2)
+    assert rep2.straggler_flags == []
+
+
 def test_heartbeat():
     from repro.runtime.fault_tolerance import Heartbeat
     hb = Heartbeat(0, timeout_s=0.05)
